@@ -1,0 +1,44 @@
+"""Fig. 13 — DBRX latency/throughput vs attention DP degree (n_a).
+
+Paper: latency flat while attention is the bottleneck (DP 1->8, linear
+throughput scaling); at DP=8 computation balances (T_a ~= T_e, peak
+normalized throughput); beyond that experts bottleneck and normalized
+throughput falls."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.config import get_config
+from repro.core import pingpong
+from repro.core.planner import HARDWARE, attn_time, comm_time, expert_time
+
+
+def run():
+    cfg = get_config("dbrx")
+    hw = HARDWARE["A100"]
+    tp_a = tp_e = 2
+    m = 3
+    E, K = cfg.moe.n_experts, cfg.moe.top_k
+    b_a = 64  # fixed per-attention-node micro-batch (paper holds load/node)
+    rows = []
+    for n_a in (1, 2, 4, 8, 16, 32):
+        B = b_a * m * n_a
+        b_e = B * K / (m * E)
+        t_a = attn_time(cfg, b_a, 730, hw, tp_a)
+        t_e = expert_time(cfg, b_e, hw, tp_e)
+        t_c = comm_time(cfg, b_a, b_e, hw, hw, tp_a, tp_e)
+        t_iter = pingpong.iteration_latency(t_a, t_e, t_c, m, cfg.n_layers)
+        n_gpus = tp_a * n_a + tp_e * E
+        rows.append((n_a, t_iter * 1e3, B / t_iter / n_gpus,
+                     t_a >= t_e))
+    # find the balance point
+    peak = max(rows, key=lambda r: r[2])
+    emit("fig13_dbrx_dp", 0.0,
+         "; ".join(f"DP={r[0]}: TPOT={r[1]:.0f}ms tput/gpu={r[2]:.0f} "
+                   f"{'attn-bound' if r[3] else 'expert-bound'}"
+                   for r in rows)
+         + f"; peak at DP={peak[0]} (paper: DP=8)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

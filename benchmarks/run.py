@@ -1,0 +1,49 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Run:
+  PYTHONPATH=src python -m benchmarks.run [--only fig8,fig12]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+BENCHES = [
+    ("fig1", "benchmarks.fig1_util"),
+    ("fig8", "benchmarks.fig8_homogeneous"),
+    ("fig9", "benchmarks.fig9_heterogeneous"),
+    ("fig10", "benchmarks.fig10_m2n"),
+    ("fig11", "benchmarks.fig11_m2n_scale"),
+    ("fig12", "benchmarks.fig12_microbatch"),
+    ("fig13", "benchmarks.fig13_dp_degree"),
+    ("kernels", "benchmarks.kernels_bench"),
+    ("serve", "benchmarks.serve_bench"),
+    ("load_balance", "benchmarks.load_balance_bench"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench keys (default: all)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failed = []
+    for key, module in BENCHES:
+        if only and key not in only:
+            continue
+        try:
+            __import__(module)
+            sys.modules[module].run()
+        except Exception:  # noqa: BLE001
+            failed.append(key)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""End-to-end serving driver (the paper's scenario): serve a small MoE
+model with batched requests through BOTH runtimes and verify they agree
+token-for-token.
+
+  PYTHONPATH=src python examples/serve_moe.py [--arch qwen2-moe-a2.7b]
+"""
+import argparse
+
+from repro.launch.serve import run as serve_run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-moe-a2.7b")
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+    from repro.config import get_config, reduced
+    from repro.core.disagg import DisaggPlan, DisaggregatedInstance
+    from repro.models import init_params
+    from repro.serving.engine import Engine, Request
+
+    cfg = reduced(get_config(args.arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(2, cfg.vocab, size=rng.randint(2, 10)).tolist()
+               for _ in range(args.requests)]
+
+    def serve(decode_fn, label):
+        eng = Engine(cfg, params, max_batch=4, max_seq=128,
+                     decode_fn=decode_fn)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=8))
+        done = {r.rid: r.generated for r in eng.run_until_done()}
+        print(f"[{label}] {eng.stats()}")
+        return done
+
+    mono = serve(None, "monolithic")
+    inst = DisaggregatedInstance(cfg, params,
+                                 plan=DisaggPlan(n_microbatches=3))
+    disagg = serve(inst.decode_step, "disaggregated m=3")
+    agree = sum(mono[i] == disagg[i] for i in mono)
+    print(f"\ntoken-for-token agreement: {agree}/{len(mono)} requests")
+    assert agree == len(mono), "runtimes diverged!"
+    print("disaggregated expert parallelism == monolithic reference ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs / peak_FLOP/s            (per-chip)
+  memory term     = HLO_bytes / HBM_bw                 (per-chip)
+  collective term = collective_bytes / link_bw         (per-chip)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (the SPMD
+module is per-device, so no division by chip count).  collective_bytes is
+parsed from the compiled HLO text: operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute /
+ragged-all-to-all op.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# e.g. "bf16[256,4096]{1,0}" or "f32[8,16,128]"
+_TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# instruction definition: "%name = TYPE opcode(operands)"
+_DEF_RE = re.compile(
+    r"%([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\])(?:\{[^}]*\})?)\s+"
+    r"([\w\-]+)\(([^)]*)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _shape_bytes(type_str: str) -> int:
+    return sum(_type_bytes(m.group(1), m.group(2))
+               for m in _TYPE_RE.finditer(type_str))
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum per-device wire bytes per collective kind from HLO text.
+
+    CPU-backend HLO omits operand types at call sites, so we first build a
+    symbol table (instruction name -> result bytes), then charge each
+    collective the max of its operand and result sizes (covers all-gather,
+    where the result is the big side, and reduce-scatter, where the
+    operand is).  ``-start``/``-done`` async pairs are counted once.
+    """
+    sizes: Dict[str, int] = {}
+    records = []
+    for m in _DEF_RE.finditer(hlo_text):
+        name, type_str, opcode, operands = m.groups()
+        sizes[name] = _shape_bytes(type_str)
+        base = opcode.removesuffix("-start").removesuffix("-done")
+        if base in _COLLECTIVES:
+            records.append((name, type_str, opcode, operands, base))
+    out: Dict[str, int] = {}
+    for name, type_str, opcode, operands, base in records:
+        if opcode.endswith("-done"):
+            continue  # its -start twin carries the payload
+        op_bytes = sum(sizes.get(o.group(1), 0)
+                       for o in _OPERAND_RE.finditer(operands))
+        total = max(_shape_bytes(type_str), op_bytes)
+        out[base] = out.get(base, 0) + total
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float                  # 6 * N_active * tokens (per chip share)
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+    per_device_mem: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def step_time_bound(self) -> float:
+        """Roofline lower bound on step time (terms overlap perfectly)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on MFU given the dominant term."""
+        if self.step_time_bound == 0:
+            return 0.0
+        return (self.model_flops / self.peak_flops) / self.step_time_bound
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        for k in ("t_compute", "t_memory", "t_collective", "bottleneck",
+                  "useful_flops_ratio", "step_time_bound", "mfu_bound"):
+            d[k] = getattr(self, k)
+        return d
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.t_compute*1e3:.2f} | {self.t_memory*1e3:.2f} | "
+                f"{self.t_collective*1e3:.2f} | **{self.bottleneck}** | "
+                f"{self.useful_flops_ratio:.2f} | {self.mfu_bound:.2f} |")
+
+
+def model_flops_estimate(cfg, shape_cfg, n_chips: int) -> float:
+    """6*N*D rule (active params for MoE), per chip."""
+    n_active = cfg.active_param_count()
+    if shape_cfg.kind == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        mult = 6.0
+    elif shape_cfg.kind == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        mult = 2.0
+    else:  # decode: one token per request
+        tokens = shape_cfg.global_batch
+        mult = 2.0
+    return mult * n_active * tokens / n_chips
+
+
+def analyze(arch: str, shape: str, mesh_name: str, n_chips: int,
+            cost: dict, hlo_text: str, model_flops: float,
+            per_device_mem: Optional[float] = None) -> Roofline:
+    coll = collective_bytes(hlo_text)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_chips=n_chips,
+        hlo_flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops,
+        per_device_mem=per_device_mem)
+
+
+TABLE_HEADER = (
+    "| arch | shape | mesh | T_comp (ms) | T_mem (ms) | T_coll (ms) "
+    "| bottleneck | useful FLOP ratio | MFU bound |\n"
+    "|---|---|---|---|---|---|---|---|---|")

@@ -1,0 +1,268 @@
+"""Configuration system for the repro framework.
+
+Every architecture is described by a ``ModelConfig``; every benchmark
+input shape by a ``ShapeConfig``.  Configs are plain frozen dataclasses so
+they hash, compare, and print cleanly, and so jit caches key on them.
+
+Layer kinds (one token-mixing module + one FFN per layer, except noted):
+  "attn"      global causal self-attention + FFN
+  "local"     sliding-window causal self-attention + FFN
+  "cross"     (gated) cross-attention to static source embeddings + FFN
+  "selfcross" self-attention + cross-attention + FFN  (whisper decoder)
+  "rglru"     RG-LRU recurrent block + FFN            (recurrentgemma)
+  "ssd"       Mamba-2 SSD block (no separate FFN)
+
+A model's layer stack is ``block_pattern`` repeated ``n_blocks`` times
+followed by ``remainder_pattern``; the repeated part is executed with
+``jax.lax.scan`` over stacked parameters so HLO size (and compile time)
+is O(len(block_pattern)), not O(n_layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+LAYER_KINDS = ("attn", "local", "cross", "selfcross", "rglru", "ssd")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration."""
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    # qwen2-moe style always-on shared experts (computed densely).
+    n_shared_experts: int = 0
+    d_ff_shared: int = 0
+    # arctic style parallel dense-FFN residual (computed densely).
+    d_ff_dense_residual: int = 0
+    capacity_factor: float = 1.25
+    # token group size for GShard-style einsum dispatch (memory control)
+    group_size: int = 2048
+    router_aux_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD configuration."""
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 64
+    conv_width: int = 4
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RG-LRU (Griffin / RecurrentGemma) recurrent block configuration."""
+    lru_width: int
+    conv_width: int = 4
+    # c exponent in a_t = a^(c * r_t)
+    c: float = 8.0
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Auxiliary encoder (whisper audio encoder).  Consumes precomputed
+    frame embeddings from the stubbed conv/mel frontend."""
+    n_layers: int
+    source_len: int  # number of frames/patches produced by the frontend
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                      # dense|moe|ssm|hybrid|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None      # default: d_model // n_heads
+    block_pattern: Tuple[str, ...] = ("attn",)
+    remainder_pattern: Tuple[str, ...] = ()
+    window: int = 4096                  # sliding window for "local"
+    attn_softcap: float = 0.0           # gemma2
+    logit_softcap: float = 0.0          # gemma2
+    use_post_norm: bool = False         # gemma2 post-block norms
+    act: str = "silu"                   # silu (swiglu) | gelu (geglu)
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    cross_source_len: int = 0           # image/audio token count for "cross"
+    # which input shapes this arch supports ("train","prefill","decode","long")
+    supports_long_context: bool = False
+    long_context_note: str = ""
+    source: str = ""                    # citation for the config
+
+    def __post_init__(self):
+        n_rem = len(self.remainder_pattern)
+        n_pat = len(self.block_pattern)
+        if (self.n_layers - n_rem) % n_pat != 0:
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} incompatible with "
+                f"pattern of {n_pat} + remainder of {n_rem}")
+        for k in self.block_pattern + self.remainder_pattern:
+            if k not in LAYER_KINDS:
+                raise ValueError(f"unknown layer kind {k!r}")
+
+    @property
+    def n_blocks(self) -> int:
+        return (self.n_layers - len(self.remainder_pattern)) // len(self.block_pattern)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def has_cross(self) -> bool:
+        kinds = self.block_pattern + self.remainder_pattern
+        return any(k in ("cross", "selfcross") for k in kinds)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + all layers)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        qkv = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+
+        def ffn_params() -> int:
+            if self.moe is not None:
+                m = self.moe
+                p = d * m.n_experts  # router
+                p += m.n_experts * 3 * d * m.d_ff_expert
+                if m.n_shared_experts:
+                    p += 3 * d * m.d_ff_shared
+                if m.d_ff_dense_residual:
+                    p += 3 * d * m.d_ff_dense_residual
+                return p
+            return 3 * d * self.d_ff
+
+        def layer_params(kind: str) -> int:
+            if kind in ("attn", "local"):
+                return qkv + ffn_params() + 2 * d
+            if kind == "cross":
+                return qkv + ffn_params() + 3 * d + 2
+            if kind == "selfcross":
+                return 2 * qkv + ffn_params() + 3 * d
+            if kind == "rglru":
+                r = self.rglru
+                w = r.lru_width
+                return (2 * d * w + r.conv_width * w + 2 * w * w + w
+                        + w * d + ffn_params() + 2 * d)
+            if kind == "ssd":
+                s = self.ssm
+                di = s.d_inner(d)
+                h = s.n_heads(d)
+                proj_in = d * (2 * di + 2 * s.d_state + h)
+                return (proj_in + s.conv_width * (di + 2 * s.d_state)
+                        + 3 * h + di + di * d + d)
+            raise ValueError(kind)
+
+        total = self.vocab * d  # embedding
+        if not self.tie_embeddings:
+            total += self.vocab * d
+        total += d  # final norm
+        for k in self.block_pattern:
+            total += layer_params(k) * self.n_blocks
+        for k in self.remainder_pattern:
+            total += layer_params(k)
+        if self.encoder is not None:
+            enc_layer = 2 * qkv // 2 + 3 * d * self.d_ff // 3 * 0  # placeholder
+            enc_layer = qkv + 3 * d * self.d_ff + 2 * d
+            total += self.encoder.n_layers * enc_layer + d
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        inactive_per_layer = (m.n_experts - m.top_k) * 3 * self.d_model * m.d_ff_expert
+        return self.param_count() - inactive_per_layer * self.n_layers
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all():
+    # importing the package registers every config module
+    from repro import configs as _  # noqa: F401
+
+
+def reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 256,
+            n_heads: int = 4, vocab: int = 512) -> ModelConfig:
+    """A tiny same-family variant for CPU smoke tests.
+
+    Keeps the layer-kind pattern, MoE-ness, softcaps etc., shrinks dims:
+    <=2 effective blocks, d_model<=512, <=4 experts.
+    """
+    hd = 64
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads) // max(1, cfg.n_heads // max(cfg.n_kv_heads, 1) and 1))
+    # preserve GQA ratio where possible
+    ratio = max(1, cfg.n_heads // max(cfg.n_kv_heads, 1))
+    n_kv = max(1, n_heads // ratio)
+    pat = cfg.block_pattern
+    rem = ()
+    layers = len(pat) * max(1, n_layers // len(pat)) if len(pat) <= n_layers else len(pat)
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=min(cfg.moe.top_k, 2), d_ff_expert=128,
+            d_ff_shared=128 if cfg.moe.n_shared_experts else 0,
+            n_shared_experts=min(cfg.moe.n_shared_experts, 1),
+            d_ff_dense_residual=128 if cfg.moe.d_ff_dense_residual else 0,
+            group_size=64)
+    ssm = dataclasses.replace(cfg.ssm, d_state=16, head_dim=32, chunk=16) if cfg.ssm else None
+    rgl = dataclasses.replace(cfg.rglru, lru_width=d_model) if cfg.rglru else None
+    enc = dataclasses.replace(cfg.encoder, n_layers=2, source_len=32) if cfg.encoder else None
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-smoke", n_layers=layers, d_model=d_model,
+        n_heads=n_heads, n_kv_heads=n_kv, head_dim=hd,
+        d_ff=4 * d_model if cfg.d_ff else 0, vocab=vocab,
+        block_pattern=pat, remainder_pattern=rem, window=min(cfg.window, 16),
+        moe=moe, ssm=ssm, rglru=rgl, encoder=enc,
+        cross_source_len=16 if cfg.cross_source_len else 0)

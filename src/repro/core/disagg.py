@@ -1,0 +1,296 @@
+"""Disaggregated expert parallelism runtime (paper §3-§4).
+
+The paper's architecture proper: attention modules and expert modules on
+*disjoint* device groups.
+
+  * attention group — data-parallel mesh ("dp",): attention weights
+    replicated, per-request KV caches sharded over dp.  The router
+    (gating) runs here, fused with dispatch preparation (paper §6).
+  * expert group — expert-parallel mesh ("ep",): routed expert weights
+    sharded by expert id (each "expert node" holds complete experts —
+    complete GEMMs, the EP property of §2.2).  Dense archs degenerate to
+    E=1 with the FFN weight TP-sharded over "ep" on the hidden dim.
+
+Per decode step and layer, each micro-batch does
+  attn phase (dp mesh) -> M2N dispatch -> expert phase (ep mesh)
+  -> N2M return -> combine (dp mesh),
+where the M2N/N2M hops are cross-mesh ``jax.device_put`` resharding —
+the JAX analogue of the paper's RDMA write path (receiver-addressed,
+sized to the routed traffic, no host staging).  Ping-pong overlap falls
+out of JAX async dispatch: the python loop issues attn(mb+1) before
+blocking on expert(mb); with disjoint device groups both run
+concurrently.  Shared experts and arctic's dense residual are computed
+on the attention side (they are batch-dense — paper's placement).
+
+Applicability (DESIGN.md §Arch-applicability): layer kinds attn/local
+with dense or MoE FFN.  SSM/RG-LRU/cross layers have no separable FFN
+stage here and are served by the monolithic engine instead.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.core.pingpong import build_schedule
+from repro.models import moe as moe_lib
+from repro.models.common import rms_norm
+from repro.models.ffn import gated_ffn
+from repro.models.transformer import (_lm_head, _embed_tokens,
+                                      ffn_decode_sublayer,
+                                      self_attn_decode_sublayer)
+
+EXPERT_KEYS = ("we1", "we3", "we2")
+
+
+def _layer_index(cfg: ModelConfig, l: int):
+    """layer l -> (pattern position or remainder index, block index)."""
+    np_, nr = len(cfg.block_pattern), len(cfg.remainder_pattern)
+    scanned = cfg.n_blocks * np_
+    if l < scanned:
+        return ("block", l % np_, l // np_)
+    return ("remainder", l - scanned, None)
+
+
+def _slice_layer_params(params: dict, cfg: ModelConfig, l: int) -> dict:
+    where, pos, blk = _layer_index(cfg, l)
+    if where == "block":
+        return jax.tree.map(lambda a: a[blk], params["blocks"][pos])
+    return params["remainder"][pos]
+
+
+def _layer_kind(cfg: ModelConfig, l: int) -> str:
+    where, pos, _ = _layer_index(cfg, l)
+    return (cfg.block_pattern[pos] if where == "block"
+            else cfg.remainder_pattern[pos])
+
+
+@dataclass
+class DisaggPlan:
+    n_microbatches: int = 3
+    capacity_mode: str = "full"
+    # route the expert GEMMs through the Pallas grouped_matmul kernel
+    # (interpret mode on CPU; real kernel on TPU) — §6 "fused kernels"
+    use_kernels: bool = False
+
+
+class DisaggregatedInstance:
+    """One model replica served with disaggregated expert parallelism."""
+
+    def __init__(self, cfg: ModelConfig, params: dict,
+                 attn_devices: Optional[Sequence] = None,
+                 expert_devices: Optional[Sequence] = None,
+                 plan: DisaggPlan = DisaggPlan()):
+        for kind in cfg.block_pattern + cfg.remainder_pattern:
+            if kind not in ("attn", "local"):
+                raise NotImplementedError(
+                    f"disaggregated runtime does not support layer kind "
+                    f"{kind!r} ({cfg.name}); use the monolithic engine "
+                    f"(see DESIGN.md §Arch-applicability)")
+        devs = jax.devices()
+        attn_devices = list(attn_devices or devs[: max(1, len(devs) // 2)])
+        expert_devices = list(expert_devices or devs[max(1, len(devs) // 2):]
+                              or devs[:1])
+        self.cfg = cfg
+        self.plan = plan
+        self.attn_mesh = Mesh(np.array(attn_devices), ("dp",))
+        self.expert_mesh = Mesh(np.array(expert_devices), ("ep",))
+        self.n_expert_nodes = len(expert_devices)
+
+        # ---- split parameters: attention side vs expert side -------------
+        def attn_side(tree):
+            return {k: v for k, v in tree.items() if k not in EXPERT_KEYS}
+
+        self.layers_attn: List[dict] = []
+        self.layers_expert: List[Optional[dict]] = []
+        for l in range(cfg.n_layers):
+            lp = _slice_layer_params(params, cfg, l)
+            self.layers_attn.append(attn_side(lp))
+            if cfg.moe is not None:
+                self.layers_expert.append({k: lp[k] for k in EXPERT_KEYS})
+            else:
+                self.layers_expert.append(
+                    {"w1": lp["w1"], "w3": lp["w3"], "w2": lp["w2"]})
+        self.head = {k: params[k] for k in ("embed", "final_norm", "lm_head")
+                     if k in params}
+
+        # ---- placement ----------------------------------------------------
+        rep_a = NamedSharding(self.attn_mesh, P())
+        self.layers_attn = jax.device_put(self.layers_attn, rep_a)
+        self.head = jax.device_put(self.head, rep_a)
+        if cfg.moe is not None:
+            ep_shard = NamedSharding(self.expert_mesh, P("ep"))
+            self.expert_in_spec = P("ep")       # (E, C, d) sharded by expert
+        else:
+            ep_shard = {"w1": NamedSharding(self.expert_mesh, P(None, "ep")),
+                        "w3": NamedSharding(self.expert_mesh, P(None, "ep")),
+                        "w2": NamedSharding(self.expert_mesh, P("ep", None))}
+            self.expert_in_spec = P()           # (T, d) replicated (TP FFN)
+        self.layers_expert = [
+            jax.device_put(le, ep_shard) for le in self.layers_expert]
+
+        self._build_jits()
+
+    # ------------------------------------------------------------------ jits
+    def _build_jits(self):
+        cfg = self.cfg
+        dp = NamedSharding(self.attn_mesh, P("dp"))
+        rep_e = NamedSharding(self.expert_mesh, P())
+
+        def attn_phase(p, x, cache, pos, window):
+            delta, new_cache = self_attn_decode_sublayer(p, cfg, x, pos,
+                                                         cache, window)
+            x = x + delta
+            h = rms_norm(x, p["ln2"])
+            if cfg.moe is None:
+                return x, h, new_cache, None
+            routing = moe_lib.route(h, p["router"], cfg.moe.top_k)
+            cap = moe_lib.expert_capacity(h.shape[0], cfg.moe,
+                                          self.plan.capacity_mode)
+            idx_buf, gate_buf = moe_lib.dispatch_indices(
+                routing, cfg.moe.n_experts, cap)
+            xe = h.at[idx_buf].get(mode="fill", fill_value=0)  # (E, C, d)
+            return x, h, new_cache, {"xe": xe, "idx": idx_buf,
+                                     "gates": gate_buf}
+
+        def expert_phase_moe(pe, xe):
+            if self.plan.use_kernels:
+                from repro.kernels import ops as kops
+                return kops.grouped_mlp(xe, pe["we1"], pe["we3"], pe["we2"],
+                                        cfg.act)
+            h = moe_lib.activation(jnp.einsum("ecd,edf->ecf", xe, pe["we1"]),
+                                   cfg.act)
+            h = h * jnp.einsum("ecd,edf->ecf", xe, pe["we3"])
+            return jnp.einsum("ecf,efd->ecd", h, pe["we2"])
+
+        def expert_phase_dense(pe, h):
+            return gated_ffn(h, pe["w1"], pe["w3"], pe["w2"], cfg.act)
+
+        def combine_phase(p, x, h, out, idx_buf, gate_buf):
+            T, d = x.shape
+            y = jnp.zeros((T, d), jnp.float32)
+            w = out.astype(jnp.float32) * gate_buf[..., None]
+            y = y.at[idx_buf.reshape(-1)].add(w.reshape(-1, d), mode="drop")
+            y = y.astype(x.dtype)
+            if "ws1" in p:   # shared experts stay with attention (dense)
+                shared = gated_ffn(h, p["ws1"], p["ws3"], p["ws2"], cfg.act)
+                g = jax.nn.sigmoid(h.astype(jnp.float32)
+                                   @ p["shared_gate"].astype(jnp.float32))
+                y = y + (g[:, None] * shared.astype(jnp.float32)).astype(x.dtype)
+            if "wd1" in p:   # arctic dense residual
+                y = y + gated_ffn(h, p["wd1"], p["wd3"], p["wd2"], cfg.act)
+            if cfg.use_post_norm:
+                y = rms_norm(y, p["ln2_post"])
+            return x + y
+
+        def combine_dense(p, x, out):
+            if cfg.use_post_norm:
+                out = rms_norm(out, p["ln2_post"])
+            return x + out
+
+        def embed(head, tokens):
+            return _embed_tokens(head, cfg, tokens)
+
+        def lm_head(head, x):
+            return _lm_head(head, cfg, x)
+
+        self._attn_phase = {
+            w: jax.jit(lambda p, x, c, pos, w=w: attn_phase(p, x, c, pos, w))
+            for w in {0, cfg.window}}
+        ein = NamedSharding(self.expert_mesh, self.expert_in_spec)
+        if cfg.moe is not None:
+            self._expert_phase = jax.jit(expert_phase_moe,
+                                         in_shardings=(None, ein),
+                                         out_shardings=ein)
+        else:
+            self._expert_phase = jax.jit(expert_phase_dense,
+                                         in_shardings=(None, ein),
+                                         out_shardings=rep_e)
+        self._combine = jax.jit(combine_phase)
+        self._combine_dense = jax.jit(combine_dense)
+        self._embed = jax.jit(embed)
+        self._lm_head = jax.jit(lm_head)
+        self._expert_sharding = ein
+        self._attn_rep = NamedSharding(self.attn_mesh, P())
+
+    # ------------------------------------------------------------- decoding
+    def decode_step(self, tokens: jax.Array, cache: dict, pos: jax.Array):
+        """One decode iteration for the global batch with ping-pong
+        micro-batching.  tokens/pos: (B,).  cache: monolithic cache pytree
+        (as built by models.init_cache).  Returns (logits, new_cache)."""
+        cfg = self.cfg
+        m = self.plan.n_microbatches
+        B = tokens.shape[0]
+        sizes = [B // m + (1 if i < B % m else 0) for i in range(m)]
+        offs = np.concatenate([[0], np.cumsum(sizes)]).tolist()
+        mbs = [slice(offs[i], offs[i + 1]) for i in range(m) if sizes[i]]
+
+        xs = [self._embed(self.head, tokens[s]) for s in mbs]
+        poss = [pos[s] for s in mbs]
+        # per-(mb, layer) cache entries are indexed lazily below
+
+        new_cache_entries = [[None] * cfg.n_layers for _ in mbs]
+        for l in range(cfg.n_layers):
+            kind = _layer_kind(cfg, l)
+            window = cfg.window if kind == "local" else 0
+            pa = self.layers_attn[l]
+            pe = self.layers_expert[l]
+            pending = []
+            for i, s in enumerate(mbs):
+                entry = self._cache_entry(cache, l, s)
+                x, h, new_entry, disp = self._attn_phase[window](
+                    pa, xs[i], entry, poss[i])
+                new_cache_entries[i][l] = new_entry
+                if cfg.moe is not None:
+                    buf = jax.device_put(disp["xe"], self._expert_sharding)
+                    out = self._expert_phase(pe, buf)            # expert mesh
+                    pending.append((i, x, h, out, disp))
+                else:
+                    buf = jax.device_put(h, self._expert_sharding)
+                    out = self._expert_phase(pe, buf)
+                    pending.append((i, x, h, out, None))
+            for (i, x, h, out, disp) in pending:
+                out_back = jax.device_put(out, self._attn_rep)   # N2M
+                if cfg.moe is not None:
+                    xs[i] = self._combine(pa, x, h, out_back, disp["idx"],
+                                          disp["gates"])
+                else:
+                    xs[i] = self._combine_dense(pa, x, out_back)
+
+        logits = jnp.concatenate([self._lm_head(self.head, x) for x in xs], 0)
+        new_cache = self._merge_cache(cache, new_cache_entries, mbs)
+        return logits, new_cache
+
+    # ------------------------------------------------------------- plumbing
+    def _cache_entry(self, cache, l, s):
+        where, pos_i, blk = _layer_index(self.cfg, l)
+        if where == "block":
+            entry = jax.tree.map(lambda a: a[blk], cache["blocks"][pos_i])
+        else:
+            entry = cache["remainder"][pos_i]
+        return jax.tree.map(lambda a: a[s], entry)
+
+    def _merge_cache(self, cache, new_entries, mbs):
+        cfg = self.cfg
+        cache = jax.tree.map(lambda a: a, cache)  # shallow copy pytree
+        blocks = [jax.tree.map(lambda a: a, b) for b in cache["blocks"]]
+        remainder = list(cache["remainder"])
+        for l in range(cfg.n_layers):
+            where, pos_i, blk = _layer_index(cfg, l)
+            for i, s in enumerate(mbs):
+                upd = new_entries[i][l]
+                if where == "block":
+                    blocks[pos_i] = jax.tree.map(
+                        lambda full, part: full.at[blk, s].set(part),
+                        blocks[pos_i], upd)
+                else:
+                    remainder[pos_i] = jax.tree.map(
+                        lambda full, part: full.at[s].set(part),
+                        remainder[pos_i], upd)
+        return {"blocks": tuple(blocks), "remainder": tuple(remainder)}

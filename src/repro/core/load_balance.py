@@ -1,0 +1,73 @@
+"""Expert load balancing with on-device redundancy (paper §6).
+
+Distribute M experts across N expert nodes minimizing
+    max_{j=1..N} C_j,   C_j = sum_i x_ij * max(a_i, K),
+where x_ij are allocation fractions (sum_j x_ij = 1), a_i is expert i's
+measured traffic cost and K the floor cost of a cold expert.  Hot experts
+may be *replicated* (fractionally split across nodes); cold experts are
+packed whole.  Greedy approximation: water-filling against the ideal
+per-node level, processing experts in descending cost (LPT).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+
+@dataclass
+class Placement:
+    # fractions[i][j] = share of expert i served by node j
+    fractions: np.ndarray
+    node_cost: np.ndarray
+    max_cost: float
+    ideal: float
+
+    @property
+    def imbalance(self) -> float:
+        return self.max_cost / self.ideal if self.ideal > 0 else 1.0
+
+
+def balance_experts(loads, n_nodes: int, cold_floor: float = 1.0,
+                    allow_replication: bool = True) -> Placement:
+    """Greedy fractional placement of len(loads) experts onto n_nodes."""
+    costs = np.maximum(np.asarray(loads, dtype=np.float64), cold_floor)
+    M = len(costs)
+    total = costs.sum()
+    ideal = max(total / n_nodes, costs.max() if not allow_replication else
+                total / n_nodes)
+    frac = np.zeros((M, n_nodes))
+    node_cost = np.zeros(n_nodes)
+    # heap of (cost, node)
+    heap = [(0.0, j) for j in range(n_nodes)]
+    heapq.heapify(heap)
+    level = total / n_nodes
+    order = np.argsort(-costs)
+    for i in order:
+        c = float(costs[i])
+        if allow_replication and c > level:
+            # hot expert: split across the emptiest nodes up to the level
+            remaining = c
+            while remaining > 1e-12:
+                base, j = heapq.heappop(heap)
+                room = max(level - base, remaining / n_nodes)
+                take = min(remaining, room)
+                frac[i, j] += take / c
+                node_cost[j] = base + take
+                heapq.heappush(heap, (node_cost[j], j))
+                remaining -= take
+        else:
+            base, j = heapq.heappop(heap)
+            frac[i, j] = 1.0
+            node_cost[j] = base + c
+            heapq.heappush(heap, (node_cost[j], j))
+    return Placement(frac, node_cost, float(node_cost.max()), float(level))
+
+
+def replication_plan(placement: Placement, threshold: float = 1e-9):
+    """Which experts live on which nodes (the deployment artifact)."""
+    M, N = placement.fractions.shape
+    return {j: [i for i in range(M) if placement.fractions[i, j] > threshold]
+            for j in range(N)}

@@ -1,0 +1,165 @@
+"""M2N token dispatch — the paper's §5 communication library, adapted to TPU.
+
+The paper replaces NCCL's grouped peer-to-peer all-to-all with direct
+RDMA writes sized to the actual routed traffic.  On a TPU mesh the
+analogous waste in the monolithic baseline is *structural*: the
+scatter/gather dispatch under automatic SPMD partitioning makes XLA
+all-gather full token activations and expert buffers across the expert
+axis (every shard receives every token, routed or not).
+
+This module provides the TPU-native equivalent of M2N: a ``shard_map``
+region in which each expert shard
+
+  1. computes routing for the tokens it already holds (replicated across
+     the expert axis — the "gating on attention nodes" of the paper),
+  2. gathers ONLY the tokens routed to its locally-owned experts into
+     per-expert capacity buffers (zero cross-shard traffic for dispatch),
+  3. runs its complete per-expert GEMMs (EP property the paper relies on),
+  4. contributes its weighted partial outputs to a single
+     ``psum_scatter``-able reduction over the expert axis (the combine —
+     the only wire traffic, sized T_local x d exactly).
+
+Install it around any jitted forward with ``use_m2n(mesh, ...)``; every
+MoE layer in the model then routes through this path.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.config import MoEConfig
+from repro.models import moe as moe_lib
+from repro.models.common import activation
+
+
+def _pad_experts(w: jax.Array, e_pad: int) -> jax.Array:
+    e = w.shape[0]
+    if e_pad == e:
+        return w
+    return jnp.pad(w, ((0, e_pad - e),) + ((0, 0),) * (w.ndim - 1))
+
+
+def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
+                           act: str, capacity_mode: str, *,
+                           mesh: jax.sharding.Mesh,
+                           data_axes: Sequence[str] = ("data",),
+                           expert_axis: str = "model",
+                           weights_2d: bool = False):
+    """M2N routed-experts computation under shard_map.
+
+    x: (T, d) sharded over ``data_axes``; expert weights sharded over
+    ``expert_axis``.  Returns (y (T,d), aux scalar).
+
+    weights_2d: additionally shard the expert d_ff dimension over the
+    data axes (weight-stationary 2D — the §Perf pair-1 iteration-2
+    optimization).  Decode activations are tiny, so each shard
+    all-gathers the tokens over the data axes, computes its (expert
+    slice x d_ff slice) of the MLP, and the f-partial products are
+    psum'd over the data axes.  Intended for decode-sized batches.
+    """
+    n_shards = mesh.shape[expert_axis]
+    E = cfg.n_experts
+    e_pad = -(-E // n_shards) * n_shards
+    e_loc = e_pad // n_shards
+    we1 = _pad_experts(params["we1"], e_pad)
+    we3 = _pad_experts(params["we3"], e_pad)
+    we2 = _pad_experts(params["we2"], e_pad)
+    router_w = params["router"]
+    dtuple = tuple(data_axes)
+
+    def local_fn(x_loc, router_w, w1, w3, w2):
+        if weights_2d and dtuple:
+            # gather the (tiny) token batch so every shard sees all rows
+            x_all = jax.lax.all_gather(x_loc, dtuple, axis=0, tiled=True)
+        else:
+            x_all = x_loc
+        # 1. routing — replicated across the expert axis (paper: gating is
+        #    fused on the attention side; every expert shard knows the plan)
+        routing = moe_lib.route(x_all, router_w, cfg.top_k)
+        aux = moe_lib.load_balance_loss(routing, E)
+        j = jax.lax.axis_index(expert_axis)
+        owner = routing.experts // e_loc
+        local = owner == j
+        local_ids = jnp.where(local, routing.experts - j * e_loc, 0)
+        t_all = x_all.shape[0]
+        cap = moe_lib.expert_capacity(t_all, cfg, capacity_mode)
+        # 2. dispatch: gather ONLY locally-routed tokens — no wire traffic
+        r_loc = moe_lib.Routing(routing.gates, local_ids, routing.probs)
+        idx_buf, gate_buf = moe_lib.dispatch_indices(r_loc, e_loc, cap,
+                                                     valid=local)
+        xe = x_all.at[idx_buf].get(mode="fill", fill_value=0)
+        # 3. complete per-expert GEMMs on the local shard (d_ff possibly
+        #    sliced over the data axes in weights_2d mode)
+        h = activation(jnp.einsum("ecd,edf->ecf", xe, w1), act)
+        h = h * jnp.einsum("ecd,edf->ecf", xe, w3)
+        out = jnp.einsum("ecf,efd->ecd", h, w2)
+        if weights_2d and dtuple:
+            out = jax.lax.psum(out, dtuple)    # reduce f-partials
+        # 4. combine: weighted partial sum, reduced over the expert axis.
+        y = jnp.zeros((t_all, x_all.shape[1]), jnp.float32)
+        w = out.astype(jnp.float32) * gate_buf[..., None]
+        y = y.at[idx_buf.reshape(-1)].add(w.reshape(-1, x_all.shape[1]),
+                                          mode="drop")
+        y = jax.lax.psum(y, expert_axis)
+        if weights_2d and dtuple:
+            # back to this shard's rows
+            idx = jnp.zeros((), jnp.int32)
+            for a in dtuple:
+                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+            t_loc = x_loc.shape[0]
+            y = jax.lax.dynamic_slice_in_dim(y, idx * t_loc, t_loc, 0)
+        aux = jax.lax.pmean(aux, dtuple) if dtuple else aux
+        return y.astype(x_loc.dtype), aux
+
+    w_specs = (P(expert_axis, None, dtuple), P(expert_axis, None, dtuple),
+               P(expert_axis, dtuple, None)) if weights_2d else (
+        P(expert_axis, None, None), P(expert_axis, None, None),
+        P(expert_axis, None, None))
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dtuple, None), P(None, None)) + w_specs,
+        out_specs=(P(dtuple, None), P()),
+        check_vma=False,
+    )
+    return fn(x, router_w, we1, we3, we2)
+
+
+@contextlib.contextmanager
+def use_m2n(mesh: jax.sharding.Mesh, data_axes: Sequence[str] = ("data",),
+            expert_axis: str = "model", weights_2d: bool = False):
+    """Context manager: route every MoE layer through the M2N dispatch."""
+
+    def impl(params, x, cfg, act, capacity_mode):
+        return sharded_routed_experts(
+            params, x, cfg, act, capacity_mode, mesh=mesh,
+            data_axes=data_axes, expert_axis=expert_axis,
+            weights_2d=weights_2d)
+
+    prev = moe_lib.set_routed_impl(impl)
+    try:
+        yield
+    finally:
+        moe_lib.set_routed_impl(prev)
+
+
+def m2n_traffic_bytes(t_local: int, d_model: int, top_k: int,
+                      n_experts: int, n_expert_shards: int,
+                      bytes_per_el: int = 2) -> dict:
+    """Analytic wire traffic per MoE layer for the three dispatch schemes.
+
+    Used by the roofline analysis and the fig10/11 benchmarks to compare
+    the baseline (all-gather everything), classic EP all-to-all, and the
+    M2N combine-only scheme above.
+    """
+    allgather = t_local * d_model * (n_expert_shards - 1) * bytes_per_el * 2
+    a2a = 2 * t_local * top_k * d_model * bytes_per_el * (
+        (n_expert_shards - 1) / n_expert_shards)
+    m2n = t_local * d_model * bytes_per_el * (
+        (n_expert_shards - 1) / n_expert_shards) * 2  # reduce-scatter+all-gather
+    return {"baseline_allgather": allgather, "ep_all2all": a2a, "m2n": m2n}

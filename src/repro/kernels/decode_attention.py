@@ -1,0 +1,105 @@
+"""Flash-decode GQA attention Pallas TPU kernel.
+
+The attention-node hot loop during decoding: one query token per request
+attends over its (ring-buffer) KV cache.  This is memory-bound — the
+kernel's job is to stream the KV cache HBM->VMEM exactly once per step
+with an online-softmax accumulator resident in VMEM.
+
+Layout: q (B, Hkv, rep, hd); k/v cache (B, W, Hkv, hd); grid
+(B, Hkv, W/Wb) with the KV-length dimension innermost so the
+(rep, hd) f32 accumulator and the (rep,) running max/denominator stay in
+scratch across KV blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, cpos_ref, pos_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, nw: int, window: int,
+            attn_softcap: float, scale: float):
+    w_step = pl.program_id(2)
+
+    @pl.when(w_step == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (rep, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # (Wb, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if attn_softcap > 0.0:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    cpos = cpos_ref[0]                                     # (Wb,)
+    pos = pos_ref[0]
+    ok = (cpos >= 0) & (cpos <= pos)
+    if window > 0:
+        ok &= cpos > (pos - window)
+    s = jnp.where(ok[None, :], s, -1e30)
+
+    m_old = m_ref[:, 0]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new[:, None]) * ok[None, :].astype(jnp.float32)
+    l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[:, 0] = m_new
+    l_ref[:, 0] = l_new
+
+    @pl.when(w_step == nw - 1)
+    def _():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "attn_softcap", "wb", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_pos: jax.Array, pos: jax.Array, *,
+                     window: int = 0, attn_softcap: float = 0.0,
+                     wb: int = 512, interpret: bool = True) -> jax.Array:
+    """q: (B, H, hd); caches (B, W, Hkv, hd); cache_pos (B, W); pos (B,).
+
+    Returns (B, H, hd).  VMEM per step: 2*Wb*hd (k,v) + rep*hd acc —
+    with Wb=512, hd=128: ~0.6 MB, so the 524k-long cache streams through
+    in 1024 sequential blocks per (batch, kv-head).
+    """
+    B, H, hd = q.shape
+    _, W, Hkv, _ = k_cache.shape
+    rep = H // Hkv
+    while W % wb:
+        wb //= 2
+    wb = max(wb, 1)
+    qg = q.reshape(B, Hkv, rep, hd)
+    grid = (B, Hkv, W // wb)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nw=grid[2], window=window,
+                          attn_softcap=attn_softcap, scale=hd ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b, g, w: (b, g, 0, 0)),
+            pl.BlockSpec((1, wb, 1, hd), lambda b, g, w: (b, w, g, 0)),
+            pl.BlockSpec((1, wb, 1, hd), lambda b, g, w: (b, w, g, 0)),
+            pl.BlockSpec((1, wb), lambda b, g, w: (b, w)),
+            pl.BlockSpec((1,), lambda b, g, w: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd), lambda b, g, w: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, cache_pos, pos)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,79 @@
+"""Fused gating Pallas TPU kernel (paper §6 "fused kernels").
+
+Attention nodes must, per token: run the router GEMM, softmax, select
+top-k experts, normalize combine weights, and produce per-expert token
+counts for the M2N dispatch.  Done naively this is a chain of small
+memory-bound ops; the paper fuses them into one kernel.  Here the whole
+chain runs on one VMEM-resident (Tb, E) logits tile per grid step.
+
+Outputs: gates (T,K) f32, experts (T,K) int32, per-block expert counts
+(nb, E) int32 (summed by the ops wrapper to global counts — the "tokens
+per expert node" header the M2N sender needs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, gates_ref, idx_ref, counts_ref, *, top_k: int):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    logits = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    E = logits.shape[-1]
+    probs = jax.nn.softmax(logits, axis=-1)
+    # iterative top-k: k rounds of (argmax, mask) — k is small and static
+    remaining = probs
+    gate_cols, idx_cols = [], []
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)
+        g = jnp.max(remaining, axis=-1)
+        gate_cols.append(g)
+        idx_cols.append(idx.astype(jnp.int32))
+        remaining = remaining * (1.0 - jax.nn.one_hot(idx, E, dtype=jnp.float32))
+    gates = jnp.stack(gate_cols, axis=-1)
+    idx = jnp.stack(idx_cols, axis=-1)
+    gates_ref[...] = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    idx_ref[...] = idx
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)      # (Tb, K, E)
+    counts_ref[...] = jnp.sum(onehot, axis=(0, 1))[None]
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "tb", "interpret"))
+def gating_topk(x: jax.Array, w_router: jax.Array, top_k: int, *,
+                tb: int = 256, interpret: bool = True):
+    """x: (T, d), w_router: (d, E) -> (gates (T,K), experts (T,K), counts (E,)).
+
+    VMEM per step: Tb*d (x) + d*E (router) + Tb*E (logits) — for
+    arctic-480b (d=7168, E=128, Tb=256) ~5.7 MB bf16/f32.
+    """
+    T, d = x.shape
+    E = w_router.shape[1]
+    while T % tb:
+        tb //= 2
+    tb = max(tb, 1)
+    grid = (T // tb,)
+    gates, idx, counts = pl.pallas_call(
+        functools.partial(_kernel, top_k=top_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, E), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((tb, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((1, E), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((grid[0], E), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, w_router)
+    return gates, idx, jnp.sum(counts, axis=0)

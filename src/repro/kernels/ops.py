@@ -1,0 +1,50 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels target TPU and are validated in interpret mode against the
+ref.py oracles).  On a real TPU backend set REPRO_PALLAS_INTERPRET=0 or
+pass interpret=False.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.gating_topk import gating_topk as _gating_topk
+from repro.kernels.grouped_matmul import grouped_matmul as _grouped_matmul
+from repro.models.common import activation
+
+
+def _default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def grouped_matmul(x, w, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _grouped_matmul(x, w, **kw)
+
+
+def gating_topk(x, w_router, top_k, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _gating_topk(x, w_router, top_k, **kw)
+
+
+def decode_attention(q, k_cache, v_cache, cache_pos, pos, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _decode_attention(q, k_cache, v_cache, cache_pos, pos, **kw)
+
+
+def grouped_mlp(xe, w1, w3, w2, act: str = "silu", **kw):
+    """Per-expert gated MLP built from three grouped matmuls.
+
+    xe: (E, C, d) expert token buffers -> (E, C, d).
+    """
+    h = activation(grouped_matmul(xe, w1, **kw).astype(jnp.float32), act)
+    h = h * grouped_matmul(xe, w3, **kw).astype(jnp.float32)
+    return grouped_matmul(h.astype(xe.dtype), w2, **kw)

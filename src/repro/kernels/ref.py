@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each ``*_ref`` function is the semantic ground truth; kernel tests sweep
+shapes/dtypes and ``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention as _decode_attention_jnp
+from repro.models.common import activation
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(G, M, K) x (G, K, N) -> (G, M, N), f32 accumulation."""
+    return jnp.einsum("gmk,gkn->gmn", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def grouped_mlp_ref(xe: jax.Array, w1: jax.Array, w3: jax.Array,
+                    w2: jax.Array, act: str = "silu") -> jax.Array:
+    """Per-expert gated MLP: (E,C,d)x(E,d,f)->(E,C,d)."""
+    h = activation(grouped_matmul_ref(xe, w1).astype(jnp.float32), act)
+    h = h * grouped_matmul_ref(xe, w3).astype(jnp.float32)
+    return grouped_matmul_ref(h.astype(xe.dtype), w2)
+
+
+def gating_topk_ref(x: jax.Array, w_router: jax.Array, top_k: int):
+    """Fused router oracle.  x: (T, d), w: (d, E).
+
+    Returns (gates (T,K) f32 normalized, experts (T,K) int32,
+             counts (E,) int32)."""
+    logits = x.astype(jnp.float32) @ w_router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    counts = jnp.sum(jax.nn.one_hot(experts, w_router.shape[1],
+                                    dtype=jnp.int32), axis=(0, 1))
+    return gates, experts.astype(jnp.int32), counts
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_pos, pos, *,
+                         window: int = 0, attn_softcap: float = 0.0):
+    """GQA flash-decode oracle — reuses the model-library jnp path."""
+    return _decode_attention_jnp(q, k_cache, v_cache, cache_pos, pos,
+                                 window=window, attn_softcap=attn_softcap)

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination on the production mesh with ShapeDtypeStruct inputs (no
+allocation), capture memory_analysis / cost_analysis / collective bytes,
+and emit the roofline artifacts consumed by EXPERIMENTS.md.
+
+The two lines above MUST stay first: JAX locks the device count at first
+backend initialization, and the dry-run needs 512 placeholder host
+devices.  Do not import this module from tests or benchmarks.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as rl
+from repro.config import INPUT_SHAPES, ModelConfig, ShapeConfig, get_config
+from repro.configs import ASSIGNED, PAPER
+from repro.core import m2n
+from repro.launch import sharding as shlib
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models import stubs
+from repro.models.transformer import (decode_step, init_cache, init_params,
+                                      prefill)
+from repro.training.loop import make_train_step
+from repro.training.optimizer import AdamWConfig, init_opt_state
+
+DTYPE = jnp.bfloat16
+
+
+def shape_eligible(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def effective_config(cfg: ModelConfig, shape: str,
+                     ssd_chunk: int = 0) -> ModelConfig:
+    """Per-shape architecture variants (documented in DESIGN.md)."""
+    if shape == "long_500k" and cfg.name == "gemma2-27b":
+        # 500k decode runs every layer with the sliding-window kernel —
+        # global-attention layers would need a 524k-token KV cache.
+        cfg = dataclasses.replace(cfg, block_pattern=("local", "local"))
+    if ssd_chunk and cfg.ssm is not None:
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, chunk=ssd_chunk))
+    return cfg
+
+
+def params_structs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), DTYPE))
+
+
+def zero_extend(spec: P, shape, mesh) -> P:
+    """ZeRO-1: additionally shard optimizer moments over the data axes."""
+    dt = data_axes(mesh)
+    n = 1
+    for a in dt:
+        n *= mesh.shape[a]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (ax, dim) in enumerate(zip(parts, shape)):
+        if ax is None and dim % n == 0:
+            parts[i] = dt
+            return P(*parts)
+    return P(*parts)
+
+
+def build(cfg: ModelConfig, shape_cfg: ShapeConfig, mesh, *,
+          moe_impl: str = "baseline", remat: str = "full",
+          expert_mode: str = "ep", fsdp: bool = False,
+          moments: str = "float32", seq_parallel: bool = False):
+    """Returns (jitted_fn, arg_structs) ready to .lower(*arg_structs)."""
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    pstructs = params_structs(cfg)
+    pspecs = shlib.param_specs(cfg, pstructs, mesh, expert_mode=expert_mode,
+                               fsdp=fsdp)
+    psh = shlib.to_shardings(mesh, pspecs)
+    extras = stubs.extra_input_specs(cfg, B, DTYPE)
+    extras_keys = tuple(extras.keys())
+    extras_sh = {k: NamedSharding(mesh, shlib.input_spec(v.shape, mesh))
+                 for k, v in extras.items()}
+
+    ctx = (m2n.use_m2n(mesh, data_axes(mesh), "model",
+                       weights_2d=(moe_impl == "m2n2d"))
+           if moe_impl in ("m2n", "m2n2d") else _nullcontext())
+    from repro.models import transformer as tfm
+    tfm.ACT_SPEC = (P(data_axes(mesh), "model", None) if seq_parallel
+                    else None)
+
+    if shape_cfg.kind == "train":
+        tokens = jax.ShapeDtypeStruct((B, S + 1), jnp.int32)
+        opt_structs = jax.eval_shape(
+            lambda p: init_opt_state(p, jnp.dtype(moments)), pstructs)
+        opt_specs = type(opt_structs)(
+            P(),
+            jax.tree.map(lambda sp, st: zero_extend(sp, st.shape, mesh),
+                         pspecs, pstructs,
+                         is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.map(lambda sp, st: zero_extend(sp, st.shape, mesh),
+                         pspecs, pstructs,
+                         is_leaf=lambda x: isinstance(x, P)))
+        opt_sh = shlib.to_shardings(mesh, opt_specs)
+        fn = make_train_step(cfg, AdamWConfig(), remat=remat,
+                             extras_keys=extras_keys)
+        in_sh = (psh, opt_sh,
+                 NamedSharding(mesh, shlib.input_spec(tokens.shape, mesh)),
+                 *(extras_sh[k] for k in extras_keys))
+        args = (pstructs, opt_structs, tokens,
+                *(extras[k] for k in extras_keys))
+        with ctx, mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh,
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(*args)
+        return lowered
+
+    if shape_cfg.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+        def fn(params, tokens, *extra_vals):
+            kw = dict(zip(extras_keys, extra_vals))
+            return prefill(params, cfg, tokens, max_seq=S, **kw)
+
+        in_sh = (psh, NamedSharding(mesh, shlib.input_spec(tokens.shape, mesh)),
+                 *(extras_sh[k] for k in extras_keys))
+        with ctx, mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh)
+            lowered = jitted.lower(pstructs, tokens,
+                                   *(extras[k] for k in extras_keys))
+        return lowered
+
+    # decode: ONE new token against a seq_len KV cache
+    tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    cstructs = stubs.cache_specs(cfg, B, S, DTYPE)
+    cspecs = shlib.cache_specs(cfg, cstructs, mesh, B)
+    csh = shlib.to_shardings(mesh, cspecs)
+
+    def fn(params, tokens, cache, pos):
+        return decode_step(params, cfg, tokens, cache, pos,
+                           capacity_mode="full")
+
+    tok_sh = NamedSharding(mesh, shlib.input_spec(tokens.shape, mesh))
+    with ctx, mesh:
+        jitted = jax.jit(fn, in_shardings=(psh, tok_sh, csh, tok_sh),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(pstructs, tokens, cstructs, pos)
+    return lowered
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, *, moe_impl="baseline",
+            remat="full", out_dir=None, save_hlo=False, verbose=True,
+            unroll=True, expert_mode="ep", fsdp=False, moments="float32",
+            seq_parallel=False, ssd_chunk=0, tag_extra=""):
+    # unrolled block-scan => XLA cost_analysis counts every layer (it counts
+    # a while body once); costs compile time, bought back by accuracy.
+    from repro.models import transformer as tfm
+    tfm.UNROLL_BLOCKS = unroll
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_chips = 512 if multi_pod else 256
+    cfg0 = get_config(arch)
+    shape_cfg = INPUT_SHAPES[shape]
+    if not shape_eligible(cfg0, shape):
+        return {"arch": arch, "shape": shape, "mesh": mesh_name,
+                "status": "skipped", "note": cfg0.long_context_note}
+    cfg = effective_config(cfg0, shape, ssd_chunk=ssd_chunk)
+
+    t0 = time.perf_counter()
+    lowered = build(cfg, shape_cfg, mesh, moe_impl=moe_impl, remat=remat,
+                    expert_mode=expert_mode, fsdp=fsdp, moments=moments,
+                    seq_parallel=seq_parallel)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_size": getattr(mem, "argument_size_in_bytes", None),
+            "output_size": getattr(mem, "output_size_in_bytes", None),
+            "temp_size": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size": getattr(mem, "generated_code_size_in_bytes",
+                                           None),
+        }
+    except Exception as e:  # noqa: BLE001 — backend may not support it
+        mem_d = {"error": str(e)}
+    hlo = compiled.as_text()
+    model_fl = rl.model_flops_estimate(cfg, shape_cfg, n_chips)
+    roof = rl.analyze(arch, shape, mesh_name, n_chips, cost, hlo, model_fl,
+                      per_device_mem=mem_d.get("temp_size"))
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "status": "ok",
+        "moe_impl": moe_impl, "remat": remat,
+        "expert_mode": expert_mode, "fsdp": fsdp,
+        "t_lower_s": t_lower, "t_compile_s": t_compile,
+        "memory_analysis": mem_d,
+        "cost_analysis": {k: cost.get(k) for k in
+                          ("flops", "bytes accessed", "transcendentals")},
+        "roofline": roof.to_dict(),
+        "hlo_bytes": len(hlo),
+    }
+    if verbose:
+        print(f"[{arch} x {shape} x {mesh_name}] lower {t_lower:.1f}s "
+              f"compile {t_compile:.1f}s  bottleneck={roof.bottleneck} "
+              f"Tc/Tm/Tcoll(ms)={roof.t_compute*1e3:.2f}/"
+              f"{roof.t_memory*1e3:.2f}/{roof.t_collective*1e3:.2f} "
+              f"useful={roof.useful_flops_ratio:.2f}", flush=True)
+        print(f"  memory_analysis: {mem_d}", flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = (f"{arch}_{shape}_{'multi' if multi_pod else 'single'}"
+               f"_{moe_impl}_{remat}"
+               + (f"_{expert_mode}" if expert_mode != "ep" else "")
+               + ("_fsdp" if fsdp else "")
+               + ("_seqpar" if seq_parallel else "")
+               + (f"_chunk{ssd_chunk}" if ssd_chunk else "") + tag_extra)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        if save_hlo:
+            with open(os.path.join(out_dir, tag + ".hlo"), "w") as f:
+                f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--moe-impl", default="baseline",
+                    choices=["baseline", "m2n", "m2n2d"])
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--expert-shard", default="ep", choices=["ep", "ep2d"])
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--moments", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--ssd-chunk", type=int, default=0)
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep lax.scan rolled (faster compile, "
+                         "undercounted cost_analysis)")
+    args = ap.parse_args()
+
+    archs = ASSIGNED + PAPER if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = (f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                       f"_{args.moe_impl}_{args.remat}"
+                       + (f"_{args.expert_shard}" if args.expert_shard != "ep"
+                          else "") + ("_fsdp" if args.fsdp else "")
+                       + ("_seqpar" if args.seq_parallel else "")
+                       + (f"_chunk{args.ssd_chunk}" if args.ssd_chunk else ""))
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") == "ok":
+                        print(f"[{arch} x {shape} x "
+                              f"{'multi' if mp else 'single'}] cached, skip",
+                              flush=True)
+                        results.append(prev)
+                        continue
+                try:
+                    rec = run_one(arch, shape, mp, moe_impl=args.moe_impl,
+                                  remat=args.remat, out_dir=args.out,
+                                  save_hlo=args.save_hlo,
+                                  unroll=not args.no_unroll,
+                                  expert_mode=args.expert_shard,
+                                  fsdp=args.fsdp, moments=args.moments,
+                                  seq_parallel=args.seq_parallel,
+                                  ssd_chunk=args.ssd_chunk)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "FAILED", "error": repr(e)[:500]}
+                    print(f"[{arch} x {shape}] FAILED: {e}", flush=True)
+                results.append(rec)
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    fail = sum(r["status"] == "FAILED" for r in results)
+    print(f"\ndry-run complete: {ok} ok, {sk} skipped, {fail} failed")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches JAX device state — the dry-run must set XLA_FLAGS
+before the first device query.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips for multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh: jax.sharding.Mesh):
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh: jax.sharding.Mesh) -> str:
+    assert "model" in mesh.axis_names
+    return "model"

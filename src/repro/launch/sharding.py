@@ -1,0 +1,198 @@
+"""Sharding rules: model/optimizer/input PartitionSpecs on the production
+mesh.
+
+Strategy (the paper's disaggregated-EP mapped onto one SPMD mesh):
+  * batch / tokens            -> data axes ("pod","data")
+  * attention weights         -> tensor-parallel over "model" (heads dim)
+  * routed expert weights     -> expert-parallel over "model" (experts dim;
+                                 falls back to TP over d_ff when E is not
+                                 divisible — e.g. qwen2's 60 experts on 16
+                                 shards — and to replication as last resort)
+  * embeddings / lm_head      -> vocab-sharded over "model"
+  * KV caches                 -> batch over data, kv-heads over "model";
+                                 batch-1 long-context shards the *sequence*
+                                 over data instead
+Every rule checks divisibility against the actual mesh, so one rule set
+serves every (arch x shape x mesh) combination.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.launch.mesh import data_axes, model_axis
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    sizes = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        sizes *= mesh.shape[a]
+    return n % sizes == 0
+
+
+def _spec(shape, mesh: Mesh, *rule):
+    """Build a PartitionSpec from per-dim axis suggestions, dropping any
+    that do not divide; ``rule`` applies to the TRAILING dims."""
+    pads = len(shape) - len(rule)
+    out = [None] * pads
+    for dim, axis in zip(shape[pads:], rule):
+        out.append(axis if _div(dim, mesh, axis) else None)
+    return P(*out)
+
+
+def param_spec(name: str, shape, mesh: Mesh, *, expert_mode: str = "ep",
+               fsdp: bool = False) -> P:
+    """Sharding rule for one parameter by name (trailing-dim semantics).
+
+    expert_mode:
+      "ep"   — experts over "model" (paper-faithful EP), replicated over data
+      "ep2d" — experts over "model" AND d_ff over the data axes (weight-
+               stationary 2D: the §Perf optimization that makes 480B-scale
+               expert weights fit per-chip; decode activations are tiny, so
+               XLA moves activations to weights instead of vice versa)
+    fsdp: additionally shard big dense weights over the data axes
+          (ZeRO-3/FSDP — all-gathered per layer on use).
+    """
+    mdl = model_axis(mesh)
+    dt = data_axes(mesh)
+    r = lambda *rule: _spec(shape, mesh, *rule)
+
+    def maybe_fsdp(spec: P) -> P:
+        if not fsdp or len(shape) < 2:
+            return spec
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (ax, dim) in enumerate(zip(parts, shape)):
+            if ax is None and _div(dim, mesh, dt):
+                parts[i] = dt
+                return P(*parts)
+        return spec
+
+    if name == "embed":
+        return maybe_fsdp(r(mdl, None))
+    if name == "lm_head":
+        return maybe_fsdp(r(None, mdl))
+    if name in ("wq", "wk", "wv", "c_wq", "c_wk", "c_wv"):
+        return maybe_fsdp(r(None, mdl))
+    if name in ("wo", "c_wo"):
+        return maybe_fsdp(r(mdl, None))
+    if name in ("w1", "w3", "ws1", "ws3", "wd1", "wd3"):
+        return maybe_fsdp(r(None, mdl))
+    if name in ("w2", "ws2", "wd2"):
+        return maybe_fsdp(r(mdl, None))
+    if name in ("we1", "we3"):
+        E, d, f = shape[-3:]
+        if _div(E, mesh, mdl):
+            if expert_mode == "ep2d" and _div(f, mesh, dt):
+                return r(mdl, None, dt)        # EP x TP(d_ff) 2D
+            return maybe_fsdp(r(mdl, None, None))  # expert parallelism
+        if expert_mode == "ep2d" and _div(f, mesh, mdl) and _div(d, mesh, dt):
+            return r(None, dt, mdl)
+        return r(None, None, mdl)              # TP fallback (qwen2: 60 experts)
+    if name == "we2":
+        E, f, d = shape[-3:]
+        if _div(E, mesh, mdl):
+            if expert_mode == "ep2d" and _div(f, mesh, dt):
+                return r(mdl, dt, None)
+            return maybe_fsdp(r(mdl, None, None))
+        if expert_mode == "ep2d" and _div(f, mesh, mdl) and _div(d, mesh, dt):
+            return r(None, mdl, dt)
+        return r(None, mdl, None)
+    if name in ("w_in_x", "w_in_gate"):
+        return r(None, mdl)
+    if name == "w_out":
+        return r(mdl, None)
+    if name in ("w_a", "w_x"):                 # RG-LRU gate mats (W, W)
+        return r(None, mdl)
+    if name in ("conv_w",):
+        return r(None, mdl)
+    if name in ("b_a", "b_x", "lam", "norm", "dt_bias", "A_log", "D"):
+        return r(mdl)
+    if name == "in_proj":
+        return r(None, mdl)
+    if name == "out_proj":
+        return r(mdl, None)
+    if name == "pos_embed":
+        return r(None, None)
+    # router, norms, gates, shared_gate -> replicated
+    return P()
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh: Mesh, *,
+                expert_mode: str = "ep", fsdp: bool = False):
+    """PartitionSpec pytree matching a params (shape) pytree."""
+
+    def walk(tree):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            elif isinstance(v, (tuple, list)):
+                out[k] = type(v)(walk(e) if isinstance(e, dict) else e
+                                 for e in v)
+            else:
+                out[k] = param_spec(k, v.shape, mesh,
+                                    expert_mode=expert_mode, fsdp=fsdp)
+        return out
+
+    return walk(params_shape)
+
+
+def cache_entry_specs(entry_shapes: dict, mesh: Mesh, batch: int):
+    """Sharding for one layer-cache entry (possibly stacked on n_blocks)."""
+    dt = data_axes(mesh)
+    mdl = model_axis(mesh)
+    batch_ok = _div(batch, mesh, dt)
+    b_ax = dt if batch_ok else None
+    # kv layout: batch over data; kv-heads over model when divisible,
+    # otherwise the *sequence* over model (distattention-style) — GQA
+    # kv-head counts (8) rarely divide a 16-way model axis.
+    kv_entry = entry_shapes.get("k") or entry_shapes.get("k_src")
+    h_ax = w_ax = None
+    if kv_entry is not None:
+        if _div(kv_entry.shape[-2], mesh, mdl):
+            h_ax = mdl
+            w_ax = None if batch_ok else dt
+        else:
+            w_ax = mdl if batch_ok else dt
+    out = {}
+    for k, v in entry_shapes.items():
+        s = v.shape
+        if k in ("k", "v", "k_src", "v_src"):
+            out[k] = _spec(s, mesh, b_ax, w_ax, h_ax, None)
+        elif k == "pos":
+            out[k] = _spec(s, mesh, b_ax, w_ax)
+        elif k == "ssm":      # (..., B, h, p, n)
+            out[k] = _spec(s, mesh, dt if batch_ok else None, mdl, None, None)
+        elif k == "conv":     # (..., B, K-1, width)
+            out[k] = _spec(s, mesh, dt if batch_ok else None, None, mdl)
+        elif k == "h":        # (..., B, W)
+            out[k] = _spec(s, mesh, dt if batch_ok else None, mdl)
+        else:
+            out[k] = P()
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes, mesh: Mesh, batch: int):
+    return {
+        "blocks": tuple(cache_entry_specs(e, mesh, batch)
+                        for e in cache_shapes["blocks"]),
+        "remainder": tuple(cache_entry_specs(e, mesh, batch)
+                           for e in cache_shapes["remainder"]),
+    }
+
+
+def input_spec(shape, mesh: Mesh) -> P:
+    """Token/position arrays: batch over data axes when divisible."""
+    dt = data_axes(mesh)
+    return _spec(shape, mesh, *( (dt,) + (None,) * (len(shape) - 1) ))
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,100 @@
+"""Distributed training launcher.
+
+On the production mesh this runs the same jitted ``train_step`` the
+dry-run lowers, with real arrays; on this CPU container it is exercised
+with reduced configs (see examples/train_small.py for the end-to-end
+~100M-parameter driver).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch minitron-4b \
+      --reduced --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.config import get_config, reduced
+from repro.launch import sharding as shlib
+from repro.launch.mesh import make_mesh
+from repro.models import init_params
+from repro.models.stubs import extra_inputs
+from repro.training.checkpoint import save
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.loop import make_train_step
+from repro.training.optimizer import AdamWConfig, init_opt_state
+
+
+def run(arch: str, *, use_reduced: bool, steps: int, batch: int, seq: int,
+        lr: float, mesh_shape=None, remat: str = "none",
+        checkpoint_dir: str | None = None, log_every: int = 10,
+        dtype=jnp.float32, seed: int = 0):
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduced(cfg)
+    devs = jax.devices()
+    if mesh_shape is None:
+        mesh_shape = (len(devs), 1)
+    mesh = make_mesh(mesh_shape, ("data", "model"))
+
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key, dtype)
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(2, steps // 10),
+                          total_steps=steps)
+    opt_state = init_opt_state(params)
+    extras = extra_inputs(cfg, batch)
+    extras_keys = tuple(extras.keys())
+
+    pspecs = shlib.param_specs(cfg, params, mesh)
+    psh = shlib.to_shardings(mesh, pspecs)
+    params = jax.device_put(params, psh)
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=remat,
+                                      extras_keys=extras_keys),
+                      donate_argnums=(0, 1))
+    data = iter(SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq + 1,
+                                       batch=batch, seed=seed)))
+    tok_sh = NamedSharding(mesh, shlib.input_spec((batch, seq + 1), mesh))
+    losses = []
+    t0 = time.perf_counter()
+    with mesh:
+        for step in range(steps):
+            toks = jax.device_put(jnp.asarray(next(data)), tok_sh)
+            params, opt_state, metrics = step_fn(
+                params, opt_state, toks, *(extras[k] for k in extras_keys))
+            losses.append(float(metrics["loss"]))
+            if log_every and step % log_every == 0:
+                print(f"step {step:5d} loss {losses[-1]:8.4f} "
+                      f"lr {float(metrics['lr']):.2e}", flush=True)
+    dt = time.perf_counter() - t0
+    print(f"trained {steps} steps in {dt:.1f}s "
+          f"({steps * batch * seq / dt:.0f} tok/s); "
+          f"loss {losses[0]:.3f} -> {np.mean(losses[-5:]):.3f}")
+    if checkpoint_dir:
+        save(checkpoint_dir, steps, params, opt_state)
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+    run(args.arch, use_reduced=args.reduced, steps=args.steps,
+        batch=args.batch, seq=args.seq, lr=args.lr, remat=args.remat,
+        checkpoint_dir=args.checkpoint_dir)
+
+
+if __name__ == "__main__":
+    main()

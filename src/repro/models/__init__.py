@@ -1,0 +1,5 @@
+from repro.models.transformer import (decode_step, forward_train, init_cache,
+                                      init_params, prefill)
+
+__all__ = ["decode_step", "forward_train", "init_cache", "init_params",
+           "prefill"]

@@ -1,0 +1,13 @@
+"""Dense gated FFN (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.common import activation
+
+
+def gated_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+              act: str = "silu") -> jax.Array:
+    """(..., d) @ (d, ff) gated MLP: act(x@w1) * (x@w3) @ w2."""
+    h = activation(x @ w1, act) * (x @ w3)
+    return h @ w2

@@ -1,0 +1,150 @@
+"""Mixture-of-experts FFN layer.
+
+The *baseline* (paper-faithful "existing system") dispatch is the
+scatter/gather capacity-buffer formulation used by monolithic-SPMD
+serving systems: every token is placed into a per-expert capacity slot,
+experts run dense GEMMs over their buffers, and results are combined by a
+scatter-add.  Under pjit this lowers to XLA-inserted all-gathers of the
+token activations — the generic-collective cost the paper attributes to
+NCCL-style all-to-all serving.
+
+The *optimized* M2N dispatch (the paper's contribution, adapted to TPU)
+lives in ``repro.core.m2n`` and moves exactly the routed tokens between
+attention and expert shards with ``shard_map`` collectives.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MoEConfig
+from repro.models.common import activation
+from repro.models.ffn import gated_ffn
+
+
+class Routing(NamedTuple):
+    """Routing decision for a flat batch of T tokens."""
+    gates: jax.Array        # (T, K) combine weights (f32)
+    experts: jax.Array      # (T, K) int32 expert ids
+    probs: jax.Array        # (T, E) full router probabilities (f32)
+
+
+def route(x: jax.Array, w_router: jax.Array, top_k: int) -> Routing:
+    """Top-k softmax routing.  x: (T, d), w_router: (d, E)."""
+    logits = x.astype(jnp.float32) @ w_router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return Routing(gates, experts.astype(jnp.int32), probs)
+
+
+def load_balance_loss(routing: Routing, n_experts: int) -> jax.Array:
+    """Switch-transformer auxiliary loss: E * sum_e f_e * p_e."""
+    T = routing.probs.shape[0]
+    one_hot = jax.nn.one_hot(routing.experts, n_experts, dtype=jnp.float32)
+    f = jnp.sum(one_hot, axis=(0, 1)) / T            # fraction routed (sums to K)
+    p = jnp.mean(routing.probs, axis=0)
+    return n_experts * jnp.sum(f * p) / routing.experts.shape[1]
+
+
+def expert_capacity(n_tokens: int, cfg: MoEConfig, mode: str) -> int:
+    """Static per-expert capacity.  'full' is drop-free (C = T)."""
+    if mode == "full":
+        return n_tokens
+    cf = cfg.capacity_factor if mode == "train" else 2.0 * cfg.capacity_factor
+    c = int(-(-n_tokens * cfg.top_k * cf // cfg.n_experts))
+    c = max(4, -(-c // 4) * 4)  # multiple of 4, >= 4
+    return min(c, n_tokens)
+
+
+def dispatch_indices(routing: Routing, n_experts: int, capacity: int,
+                     valid: jax.Array | None = None):
+    """Compute per-(token,k) slot positions and the (E, C) index buffers.
+
+    valid: optional (T, K) bool — entries marked False are dropped (used by
+    the sharded M2N path to keep only locally-owned experts).
+    Returns (idx_buf, gate_buf): idx_buf[e, c] = token id feeding expert e
+    slot c (sentinel T = empty), gate_buf[e, c] = combine weight.
+    """
+    T, K = routing.experts.shape
+    mask = jax.nn.one_hot(routing.experts, n_experts, dtype=jnp.float32)  # (T,K,E)
+    if valid is not None:
+        mask = mask * valid[..., None].astype(jnp.float32)
+    flat = mask.reshape(T * K, n_experts)
+    pos_flat = jnp.cumsum(flat, axis=0) - flat
+    pos = jnp.sum(pos_flat.reshape(T, K, n_experts) * mask, axis=-1).astype(jnp.int32)
+    keep = pos < capacity
+    if valid is not None:
+        keep &= valid
+    tok_ids = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None], (T, K))
+    # invalid entries are routed to an out-of-bounds slot and dropped
+    slot = jnp.where(keep, pos, capacity)
+    e_flat = routing.experts.reshape(T * K)
+    s_flat = slot.reshape(T * K)
+    idx_buf = jnp.full((n_experts, capacity), T, dtype=jnp.int32)
+    idx_buf = idx_buf.at[e_flat, s_flat].set(tok_ids.reshape(T * K), mode="drop")
+    gate_buf = jnp.zeros((n_experts, capacity), dtype=jnp.float32)
+    gate_buf = gate_buf.at[e_flat, s_flat].set(
+        routing.gates.reshape(T * K), mode="drop")
+    return idx_buf, gate_buf
+
+
+# Pluggable routed-experts implementation.  ``repro.core.m2n`` installs a
+# shard_map-based M2N dispatch here; the default is the monolithic
+# scatter/gather capacity-buffer path (the paper's "existing system"
+# baseline).
+_ROUTED_IMPL = None
+
+
+def set_routed_impl(fn):
+    """Install fn(params, x, cfg, act, capacity_mode) -> (y, aux) or None."""
+    global _ROUTED_IMPL
+    prev = _ROUTED_IMPL
+    _ROUTED_IMPL = fn
+    return prev
+
+
+def routed_experts_dense(params: dict, x: jax.Array, cfg: MoEConfig, act: str,
+                         capacity_mode: str):
+    """Baseline routed-expert computation (monolithic scatter/gather)."""
+    T, d = x.shape
+    routing = route(x, params["router"], cfg.top_k)
+    aux = load_balance_loss(routing, cfg.n_experts)
+    C = expert_capacity(T, cfg, capacity_mode)
+    idx_buf, gate_buf = dispatch_indices(routing, cfg.n_experts, C)
+
+    # gather tokens into (E, C, d) expert buffers
+    xe = x.at[idx_buf].get(mode="fill", fill_value=0)
+    # per-expert gated MLP: (E,C,d) x (E,d,f) -> (E,C,f) -> (E,C,d)
+    h = activation(jnp.einsum("ecd,edf->ecf", xe, params["we1"]), act)
+    h = h * jnp.einsum("ecd,edf->ecf", xe, params["we3"])
+    out = jnp.einsum("ecf,efd->ecd", h, params["we2"])
+
+    # weighted scatter-add combine
+    y = jnp.zeros((T, d), dtype=jnp.float32)
+    w = out.astype(jnp.float32) * gate_buf[..., None]
+    y = y.at[idx_buf.reshape(-1)].add(w.reshape(-1, d), mode="drop")
+    return y.astype(x.dtype), aux
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: MoEConfig, act: str,
+            capacity_mode: str = "train"):
+    """MoE FFN over a flat token batch.
+
+    params: {"router": (d,E), "we1"/"we3": (E,d,ffe), "we2": (E,ffe,d),
+             optional shared expert ws1/ws3/ws2 + "shared_gate": (d,),
+             optional dense residual wd1/wd3/wd2}
+    x: (T, d).  Returns (y: (T, d), aux_loss: scalar f32).
+    """
+    impl = _ROUTED_IMPL if _ROUTED_IMPL is not None else routed_experts_dense
+    y, aux = impl(params, x, cfg, act, capacity_mode)
+
+    if "ws1" in params:  # qwen2-moe shared experts (always active)
+        shared = gated_ffn(x, params["ws1"], params["ws3"], params["ws2"], act)
+        g = jax.nn.sigmoid(x.astype(jnp.float32) @ params["shared_gate"].astype(jnp.float32))
+        y = y + (g[:, None] * shared.astype(jnp.float32)).astype(x.dtype)
+    if "wd1" in params:  # arctic parallel dense residual
+        y = y + gated_ffn(x, params["wd1"], params["wd3"], params["wd2"], act)
+    return y, aux

@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The block is: x -> {recurrent branch, gate branch}; the recurrent branch
+goes through a short causal depthwise conv then the RG-LRU linear
+recurrence; output = W_out (GeLU(gate) * h).
+
+The RG-LRU recurrence per channel:
+    r_t = sigmoid(W_a u_t + b_a)
+    i_t = sigmoid(W_x u_t + b_x)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Note: the published model uses block-diagonal W_a/W_x; we use dense
+matrices (a documented simplification that preserves shape and cost order).
+
+Sequence mode uses ``jax.lax.associative_scan`` — O(log T) depth, the
+TPU-friendly way to parallelize a linear recurrence (vs. the paper's
+GPU linear-scan kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RGLRUConfig
+
+
+def linear_recurrence(a: jax.Array, b: jax.Array, h0: jax.Array | None = None):
+    """h_t = a_t * h_{t-1} + b_t over axis 1.  a, b: (B, T, W) f32.
+
+    Returns (h: (B,T,W), h_last: (B,W)).
+    """
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, cache: jax.Array | None = None):
+    """Depthwise causal conv.  x: (B, T, W), w: (K, W).
+
+    cache: (B, K-1, W) previous inputs (decode/prefill continuation).
+    Returns (y: (B,T,W), new_cache: (B,K-1,W)).
+    """
+    K = w.shape[0]
+    B, T, W = x.shape
+    if cache is None:
+        cache = jnp.zeros((B, K - 1, W), x.dtype)
+    xc = jnp.concatenate([cache, x], axis=1)          # (B, T+K-1, W)
+    y = jnp.zeros((B, T, W), jnp.float32)
+    for j in range(K):
+        y = y + xc[:, j:j + T].astype(jnp.float32) * w[j].astype(jnp.float32)
+    return y.astype(x.dtype), xc[:, -(K - 1):]
+
+
+def rglru_scan(u: jax.Array, params: dict, cfg: RGLRUConfig,
+               h0: jax.Array | None = None):
+    """RG-LRU over a sequence.  u: (B, T, W).  Returns (h, h_last)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(uf @ params["w_x"].astype(jnp.float32) + params["b_x"])
+    log_a = -cfg.c * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    h, h_last = linear_recurrence(a, gated, h0)
+    return h.astype(u.dtype), h_last
+
+
+def rglru_step(u: jax.Array, params: dict, cfg: RGLRUConfig, h: jax.Array):
+    """Single decode step.  u: (B, W), h: (B, W) f32 state."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(uf @ params["w_x"].astype(jnp.float32) + params["b_x"])
+    log_a = -cfg.c * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return h_new.astype(u.dtype), h_new
+
+
+def rglru_block(params: dict, x: jax.Array, cfg: RGLRUConfig, act_gelu,
+                state: dict | None = None):
+    """Full Griffin recurrent block over a sequence.
+
+    x: (B, T, d).  state: {"h": (B,W) f32, "conv": (B,K-1,W)} or None.
+    Returns (y: (B,T,d), new_state).
+    """
+    u = x @ params["w_in_x"]                 # (B,T,W) recurrent branch
+    g = x @ params["w_in_gate"]              # (B,T,W) gate branch
+    cache = state["conv"] if state is not None else None
+    h0 = state["h"] if state is not None else None
+    u, new_conv = causal_conv1d(u, params["conv_w"], cache)
+    h, h_last = rglru_scan(u, params, cfg, h0)
+    y = (act_gelu(g) * h) @ params["w_out"]
+    return y, {"h": h_last, "conv": new_conv}
+
+
+def rglru_block_step(params: dict, x: jax.Array, cfg: RGLRUConfig, act_gelu,
+                     state: dict):
+    """Single-token decode.  x: (B, d)."""
+    u = x @ params["w_in_x"]                 # (B, W)
+    g = x @ params["w_in_gate"]
+    K = params["conv_w"].shape[0]
+    xc = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B,K,W)
+    uc = jnp.sum(xc.astype(jnp.float32)
+                 * params["conv_w"].astype(jnp.float32)[None], axis=1).astype(x.dtype)
+    h_new_out, h_new = rglru_step(uc, params, cfg, state["h"])
+    y = (act_gelu(g) * h_new_out) @ params["w_out"]
+    return y, {"h": h_new, "conv": xc[:, 1:]}

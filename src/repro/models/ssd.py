@@ -1,0 +1,171 @@
+"""Mamba-2 SSD (state-space duality) block, arXiv:2405.21060.
+
+Sequence mode is the chunked SSD algorithm (paper listing 1): quadratic
+attention-like computation inside fixed-size chunks, linear recurrence
+across chunk states.  This is the TPU-friendly formulation — the chunk
+dimension maps onto the MXU as dense GEMMs, and the cross-chunk scan has
+length L/Q.  Decode mode is the classic single-step state update.
+
+Single head-group (g = 1): B and C are shared across heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SSMConfig
+from repro.models.common import rms_norm
+from repro.models.rglru import causal_conv1d
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """segsum(x)[..., i, j] = sum_{k=j+1..i} x_k  (−inf for j > i)."""
+    T = x.shape[-1]
+    xr = jnp.broadcast_to(x[..., :, None], (*x.shape, T))
+    lower = jnp.tril(jnp.ones((T, T), bool), k=-1)
+    xr = jnp.where(lower, xr, 0.0)
+    s = jnp.cumsum(xr, axis=-2)
+    incl = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(incl, s, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dtA: jax.Array, B: jax.Array, C: jax.Array,
+                chunk: int, initial_state: jax.Array | None = None):
+    """Chunked SSD.
+
+    x:   (b, l, h, p)  inputs already scaled by dt
+    dtA: (b, l, h)     dt * A (negative)
+    B,C: (b, l, n)     input/output projections (shared across heads, g=1)
+    Returns (y: (b, l, h, p), final_state: (b, h, p, n)) in f32.
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    Q = chunk
+    pad = (-l) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtA = jnp.pad(dtA, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    lc = x.shape[1]
+    c = lc // Q
+    xq = x.reshape(b, c, Q, h, p).astype(jnp.float32)
+    Aq = dtA.reshape(b, c, Q, h).transpose(0, 3, 1, 2).astype(jnp.float32)  # (b,h,c,Q)
+    Bq = B.reshape(b, c, Q, n).astype(jnp.float32)
+    Cq = C.reshape(b, c, Q, n).astype(jnp.float32)
+
+    A_cumsum = jnp.cumsum(Aq, axis=-1)                      # (b,h,c,Q)
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(segsum(Aq))                                 # (b,h,c,Q,Q)
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cq, Bq, L, xq)
+    # 2. per-chunk states
+    decay_states = jnp.exp(A_cumsum[..., -1:] - A_cumsum)   # (b,h,c,Q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bq, decay_states, xq)
+    # 3. inter-chunk recurrence over chunk states.  NOTE: the paper's
+    # minimal listing uses exp(segsum(...)) here, which is O(c^2) in the
+    # number of chunks — at 32k tokens with Q=64 that term dominates
+    # everything (measured in EXPERIMENTS §Perf pair 3).  The recurrence
+    # S_c = exp(sumA_c) * S_{c-1} + states_c is linear with a scalar
+    # coefficient per (b, h), so run it as a log-depth associative scan.
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+    chunk_decay = jnp.exp(A_cumsum[..., -1]).transpose(0, 2, 1)  # (b,c,h)
+    a_seq = jnp.broadcast_to(chunk_decay[..., None, None],
+                             states.shape).reshape(b, c, -1)
+    b_seq = states.reshape(b, c, -1)
+    b_seq = b_seq.at[:, 0].add(a_seq[:, 0] * initial_state.reshape(b, -1))
+
+    def comb(xc, yc):
+        a1, b1 = xc
+        a2, b2 = yc
+        return a1 * a2, a2 * b1 + b2
+
+    _, s_all = jax.lax.associative_scan(comb, (a_seq, b_seq), axis=1)
+    s_all = s_all.reshape(b, c, h, p, n)                 # S_c after chunk c
+    final_state = s_all[:, -1]
+    # state entering chunk c is S_{c-1}
+    states = jnp.concatenate([initial_state[:, None], s_all[:, :-1]], axis=1)
+    # 4. state -> output conversion
+    state_decay_out = jnp.exp(A_cumsum)                     # (b,h,c,Q)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cq, states, state_decay_out)
+    Y = (Y_diag + Y_off).reshape(b, lc, h, p)
+    return Y[:, :l], final_state
+
+
+def ssd_step(x: jax.Array, dtA: jax.Array, dt: jax.Array, B: jax.Array,
+             C: jax.Array, state: jax.Array):
+    """Single decode step.
+
+    x: (b, h, p) raw input (NOT dt-scaled), dtA/dt: (b, h), B/C: (b, n),
+    state: (b, h, p, n) f32.  Returns (y: (b,h,p) f32, new_state).
+    """
+    dA = jnp.exp(dtA.astype(jnp.float32))                   # (b,h)
+    upd = (dt.astype(jnp.float32)[..., None, None]
+           * x.astype(jnp.float32)[..., :, None]
+           * B.astype(jnp.float32)[:, None, None, :])       # (b,h,p,n)
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    return y, new_state
+
+
+def _split_proj(z: jax.Array, cfg: SSMConfig, d_model: int):
+    di = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+    n = cfg.d_state
+    zg, xin, Bc, Cc, dt = jnp.split(z, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return zg, xin, Bc, Cc, dt  # dt: (..., h)
+
+
+def ssd_block(params: dict, x: jax.Array, cfg: SSMConfig, d_model: int,
+              state: dict | None = None):
+    """Full Mamba-2 block over a sequence.  x: (B, T, d).
+
+    state: {"ssm": (B,h,p,n) f32, "conv": (B,K-1,di+2n)} or None.
+    """
+    Bsz, T, _ = x.shape
+    h, p, n = cfg.n_heads(d_model), cfg.head_dim, cfg.d_state
+    z = x @ params["in_proj"]
+    zg, xin, Bc, Cc, dt = _split_proj(z, cfg, d_model)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    cache = state["conv"] if state is not None else None
+    conv_out, new_conv = causal_conv1d(conv_in, params["conv_w"], cache)
+    conv_out = jax.nn.silu(conv_out)
+    di = cfg.d_inner(d_model)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])    # (B,T,h)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                   # (h,)
+    xh = xin.reshape(Bsz, T, h, p)
+    x_dt = xh.astype(jnp.float32) * dt[..., None]
+    h0 = state["ssm"] if state is not None else None
+    y, final = ssd_chunked(x_dt, dt * A, Bc, Cc, cfg.chunk, h0)
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, T, di).astype(x.dtype)
+    y = rms_norm(y, params["norm"]) * jax.nn.silu(zg)
+    return y @ params["out_proj"], {"ssm": final, "conv": new_conv}
+
+
+def ssd_block_step(params: dict, x: jax.Array, cfg: SSMConfig, d_model: int,
+                   state: dict):
+    """Single-token decode.  x: (B, d)."""
+    Bsz = x.shape[0]
+    h, p, n = cfg.n_heads(d_model), cfg.head_dim, cfg.d_state
+    z = x @ params["in_proj"]
+    zg, xin, Bc, Cc, dt = _split_proj(z, cfg, d_model)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)       # (B, di+2n)
+    K = params["conv_w"].shape[0]
+    xc = jnp.concatenate([state["conv"], conv_in[:, None]], axis=1)  # (B,K,·)
+    conv_out = jnp.sum(xc.astype(jnp.float32)
+                       * params["conv_w"].astype(jnp.float32)[None], axis=1)
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    di = cfg.d_inner(d_model)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])    # (B,h)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xin.reshape(Bsz, h, p)
+    y, new_ssm = ssd_step(xh, dt * A, dt, Bc, Cc, state["ssm"])
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, di).astype(x.dtype)
+    y = rms_norm(y, params["norm"]) * jax.nn.silu(zg)
+    return y @ params["out_proj"], {"ssm": new_ssm, "conv": xc[:, 1:]}

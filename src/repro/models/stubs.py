@@ -1,0 +1,48 @@
+"""Modality-frontend stubs and input construction.
+
+Per the assignment, [audio] and [vlm] frontends are STUBS: this module
+supplies precomputed frame/patch embeddings of the right shape — either
+as concrete arrays (smoke tests, examples) or as ShapeDtypeStructs
+(dry-run ``input_specs``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.transformer import init_cache
+
+
+def extra_inputs(cfg: ModelConfig, batch: int, key=None, dtype=jnp.float32):
+    """Concrete cross_embeds/frames stubs for a model, or {} if none needed."""
+    out = {}
+    if cfg.arch_type == "vlm":
+        k = key if key is not None else jax.random.PRNGKey(0)
+        out["cross_embeds"] = (
+            jax.random.normal(k, (batch, cfg.cross_source_len, cfg.d_model),
+                              dtype) * 0.02)
+    if cfg.encoder is not None:
+        k = key if key is not None else jax.random.PRNGKey(1)
+        out["frames"] = (
+            jax.random.normal(k, (batch, cfg.encoder.source_len, cfg.d_model),
+                              dtype) * 0.02)
+    return out
+
+
+def extra_input_specs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct versions of extra_inputs for lowering."""
+    out = {}
+    if cfg.arch_type == "vlm":
+        out["cross_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.cross_source_len, cfg.d_model), dtype)
+    if cfg.encoder is not None:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder.source_len, cfg.d_model), dtype)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree mirroring init_cache without allocating."""
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype))
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), shapes)

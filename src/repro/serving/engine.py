@@ -1,0 +1,148 @@
+"""Continuous-batching serving engine.
+
+Iteration-level scheduling (Orca [72]): between decode iterations,
+finished requests leave the batch and waiting requests are prefilled into
+their slots.  The decode iteration itself runs either through the
+monolithic ``models.decode_step`` or through a
+``core.disagg.DisaggregatedInstance`` (the paper's runtime) — the engine
+is agnostic.
+
+Prefill and decode are intentionally separate phases (the paper
+decouples them across clusters; here they simply never share a batch).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import decode_step, init_cache, prefill
+from repro.models.stubs import extra_inputs
+from repro.serving.kvcache import SlotAllocator, insert_rows
+from repro.serving.sampler import SamplingParams, sample
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    generated: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return bool(self.generated and self.eos_id is not None
+                    and self.generated[-1] == self.eos_id)
+
+    @property
+    def position(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: dict, *, max_batch: int = 8,
+                 max_seq: int = 256, dtype=jnp.float32,
+                 sampling: SamplingParams = SamplingParams(),
+                 decode_fn: Optional[Callable] = None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.sampling = sampling
+        self.cache = init_cache(cfg, max_batch, max_seq, dtype)
+        self.slots = SlotAllocator(max_batch)
+        self.waiting: List[Request] = []
+        self.running: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        # decode_fn(tokens, cache, pos) -> (logits, new_cache)
+        self._decode = decode_fn or (
+            lambda toks, cache, pos: decode_step(self.params, cfg, toks,
+                                                 cache, pos))
+        self._last_token = [0] * max_batch
+        self.n_decode_iters = 0
+        self.n_prefills = 0
+
+    # ------------------------------------------------------------- frontend
+    def submit(self, req: Request):
+        req.t_submit = time.perf_counter()
+        self.waiting.append(req)
+
+    # ------------------------------------------------------------- schedule
+    def _admit(self):
+        while self.waiting and self.slots.free:
+            req = self.waiting.pop(0)
+            slot = self.slots.alloc(req.rid)
+            req.slot = slot
+            toks = jnp.asarray([req.prompt], jnp.int32)
+            extras = extra_inputs(self.cfg, 1)
+            last_logits, rcache = prefill(self.params, self.cfg, toks,
+                                          max_seq=self.max_seq, **extras)
+            self.cache = insert_rows(self.cache, rcache, slot)
+            self.key, k = jax.random.split(self.key)
+            tok = int(sample(last_logits, k, self.sampling)[0])
+            req.generated.append(tok)
+            req.t_first_token = time.perf_counter()
+            self._last_token[slot] = tok
+            self.running[req.rid] = req
+            self.n_prefills += 1
+
+    def _retire(self):
+        for rid in [r for r, q in self.running.items() if q.done]:
+            req = self.running.pop(rid)
+            req.t_done = time.perf_counter()
+            self.slots.release(rid)
+            self.finished.append(req)
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> int:
+        """One engine iteration: admit + one decode step.  Returns number
+        of active requests decoded."""
+        self._retire()
+        self._admit()
+        if not self.running:
+            return 0
+        toks = jnp.asarray(self._last_token, jnp.int32)
+        pos = jnp.zeros((self.max_batch,), jnp.int32)
+        for req in self.running.values():
+            pos = pos.at[req.slot].set(req.position - 1)
+        logits, self.cache = self._decode(toks, self.cache, pos)
+        self.key, k = jax.random.split(self.key)
+        nxt = sample(logits, k, self.sampling)
+        for req in self.running.values():
+            tok = int(nxt[req.slot])
+            req.generated.append(tok)
+            self._last_token[req.slot] = tok
+        self.n_decode_iters += 1
+        n_active = len(self.running)
+        self._retire()
+        return n_active
+
+    def run_until_done(self, max_iters: int = 10_000):
+        while (self.waiting or self.running) and max_iters:
+            self.step()
+            max_iters -= 1
+        return self.finished
+
+    # ------------------------------------------------------------- metrics
+    def stats(self) -> dict:
+        lat = [r.t_done - r.t_submit for r in self.finished]
+        toks = sum(len(r.generated) for r in self.finished)
+        return {
+            "finished": len(self.finished),
+            "tokens": toks,
+            "decode_iters": self.n_decode_iters,
+            "prefills": self.n_prefills,
+            "mean_latency_s": sum(lat) / len(lat) if lat else 0.0,
+        }

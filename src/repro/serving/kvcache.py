@@ -1,0 +1,92 @@
+"""Batch-slot KV-cache management for continuous batching.
+
+The model-level cache (models.init_cache) is a fixed (B_max, W) ring
+buffer per layer; this module manages the request->row mapping so
+requests of different lengths can join/leave the running batch between
+decode iterations (Orca-style iteration-level scheduling, which both
+baselines in the paper employ and MegaScale-Infer inherits).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.transformer import init_cache
+
+
+def insert_rows(global_cache, request_cache, row: int):
+    """Write a single-request cache (batch dim 1) into row ``row``.
+
+    Leaves shaped (n_blocks, 1, ...) go into (n_blocks, B, ...); remainder
+    leaves shaped (1, ...) into (B, ...).
+    """
+
+    def ins(full, part):
+        if part.ndim == full.ndim:  # stacked blocks: (n_blocks, B, ...)
+            return full.at[:, row].set(part[:, 0])
+        raise ValueError((full.shape, part.shape))
+
+    def ins_blocks(full_entry, part_entry):
+        return jax.tree.map(ins, full_entry, part_entry)
+
+    return {
+        "blocks": tuple(ins_blocks(f, p) for f, p in
+                        zip(global_cache["blocks"], request_cache["blocks"])),
+        "remainder": tuple(
+            jax.tree.map(lambda f, p: f.at[row].set(p[0]), f_e, p_e)
+            for f_e, p_e in zip(global_cache["remainder"],
+                                request_cache["remainder"])),
+    }
+
+
+def reset_row(global_cache, cfg: ModelConfig, row: int, max_seq: int):
+    """Invalidate a row (request finished): mark kv positions empty."""
+
+    def rst(a):
+        if a.dtype == jnp.int32 and a.ndim >= 2:  # pos arrays
+            return a.at[..., row, :].set(-1) if a.ndim == 3 else a
+        return a
+
+    def rst_entry(entry):
+        out = dict(entry)
+        if "pos" in out:
+            # stacked: (n_blocks, B, W) or flat (B, W)
+            p = out["pos"]
+            out["pos"] = (p.at[:, row].set(-1) if p.ndim == 3
+                          else p.at[row].set(-1))
+        if "h" in out:
+            h = out["h"]
+            out["h"] = (h.at[:, row].set(0) if h.ndim == 3
+                        else h.at[row].set(0))
+        if "ssm" in out:
+            s = out["ssm"]
+            idx = (slice(None), row) if s.ndim == 5 else (row,)
+            out["ssm"] = s.at[idx].set(0)
+        return out
+
+    return {
+        "blocks": tuple(rst_entry(e) for e in global_cache["blocks"]),
+        "remainder": tuple(rst_entry(e) for e in global_cache["remainder"]),
+    }
+
+
+class SlotAllocator:
+    def __init__(self, n_slots: int):
+        self.free: List[int] = list(range(n_slots))
+        self.used: Dict[int, int] = {}  # request id -> slot
+
+    def alloc(self, rid: int) -> Optional[int]:
+        if not self.free:
+            return None
+        slot = self.free.pop(0)
+        self.used[rid] = slot
+        return slot
+
+    def release(self, rid: int) -> int:
+        slot = self.used.pop(rid)
+        self.free.append(slot)
+        return slot

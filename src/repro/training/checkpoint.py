@@ -1,0 +1,76 @@
+"""Checkpointing: save/restore parameter + optimizer pytrees.
+
+Flat-key .npz format (path-joined pytree keys) with a JSON manifest;
+keeps the last ``keep`` checkpoints.  Deliberately dependency-free
+(no orbax) so it runs in this offline container.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(re.sub(r"[\[\]'\.]", "", str(p)) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(directory: str, step: int, params, opt_state=None, keep: int = 3,
+         extra: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"step": step, **(extra or {})}, f)
+    # prune old checkpoints
+    ckpts = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    for old in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(directory, old))
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    return int(ckpts[-1].split("_")[1]) if ckpts else None
+
+
+def restore(directory: str, template_params, template_opt=None,
+            step: int | None = None) -> Tuple[Any, Any, int]:
+    """Restore into the structure of the given templates."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+
+    def load(npz_path, template):
+        data = np.load(npz_path)
+        keys = list(data.keys())
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        flat_t = _flatten(template)
+        assert set(keys) == set(flat_t.keys()), (
+            f"checkpoint/template mismatch: {set(keys) ^ set(flat_t.keys())}")
+        ordered = [data[k] for k in flat_t.keys()]
+        return treedef.unflatten([
+            jax.numpy.asarray(a, dtype=l.dtype)
+            for a, l in zip(ordered, leaves)])
+
+    params = load(os.path.join(path, "params.npz"), template_params)
+    opt = None
+    if template_opt is not None and os.path.exists(
+            os.path.join(path, "opt_state.npz")):
+        opt = load(os.path.join(path, "opt_state.npz"), template_opt)
+    return params, opt, step

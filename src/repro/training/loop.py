@@ -1,0 +1,128 @@
+"""Training loop: chunked-xent LM loss, jitted train step, driver.
+
+The LM head + softmax-xent is evaluated in token chunks via ``lax.map``
+so the full (B, T, V) logits tensor is never materialized — with 256k
+vocabularies this is the difference between fitting in HBM and not
+(recorded as a beyond-paper memory optimization in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import rms_norm, softcap
+from repro.models.transformer import forward_hidden
+from repro.training.optimizer import (AdamWConfig, OptState, adamw_update,
+                                      init_opt_state)
+
+
+def chunked_xent(params: dict, cfg: ModelConfig, hidden: jax.Array,
+                 targets: jax.Array, chunk: int = 1024) -> jax.Array:
+    """Mean next-token cross-entropy without materializing full logits.
+
+    hidden: (B, T, d) pre-final-norm activations; targets: (B, T) int32.
+    """
+    B, T, d = hidden.shape
+    h = rms_norm(hidden, params["final_norm"])
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    h2 = h.reshape(B * T, d)
+    t2 = targets.reshape(B * T)
+    n = B * T
+    chunk = min(chunk, n)
+    while n % chunk:
+        chunk -= 1
+    hc = h2.reshape(n // chunk, chunk, d)
+    tc = t2.reshape(n // chunk, chunk)
+
+    @jax.checkpoint  # recompute per-chunk logits in backward: O(chunk x V)
+    def one(args):  # live memory instead of O(T x V)
+        hb, tb = args
+        logits = hb @ w.astype(hb.dtype)
+        if cfg.logit_softcap:
+            logits = softcap(logits, cfg.logit_softcap)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return -jnp.take_along_axis(lp, tb[:, None], axis=-1).sum()
+
+    losses = jax.lax.map(one, (hc, tc))
+    return losses.sum() / n
+
+
+def lm_loss(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            extras: dict, remat: str = "full", aux_coef: float = 0.01,
+            xent_chunk: int = 1024):
+    hidden, aux = forward_hidden(params, cfg, tokens[:, :-1], remat=remat,
+                                 **extras)
+    loss = chunked_xent(params, cfg, hidden, tokens[:, 1:], chunk=xent_chunk)
+    return loss + aux_coef * aux, (loss, aux)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    remat: str = "full", xent_chunk: int = 1024,
+                    extras_keys: tuple = ()):
+    """Returns train_step(params, opt_state, tokens, *extras) ->
+    (params, opt_state, metrics) — a single jittable function, ready for
+    jax.jit with in_shardings on the production mesh."""
+
+    def train_step(params, opt_state: OptState, tokens, *extra_vals):
+        extras = dict(zip(extras_keys, extra_vals))
+        (total, (loss, aux)), grads = jax.value_and_grad(
+            lm_loss, has_aux=True)(params, cfg, tokens, extras, remat,
+                                   xent_chunk=xent_chunk)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "aux": aux,
+                                   "total": total, **om}
+
+    return train_step
+
+
+@dataclass
+class TrainResult:
+    losses: list
+    steps: int
+    tokens_per_s: float
+
+
+def train(cfg: ModelConfig, params, data_iter, *, steps: int = 100,
+          opt_cfg: Optional[AdamWConfig] = None, remat: str = "none",
+          log_every: int = 10, extras_fn: Optional[Callable] = None,
+          checkpoint_dir: Optional[str] = None,
+          checkpoint_every: int = 0) -> TrainResult:
+    """Single-host training driver (examples + tests).  The multi-pod
+    path lives in launch/train.py."""
+    from repro.training import checkpoint as ckpt
+
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps)
+    opt_state = init_opt_state(params)
+    extras_keys = ()
+    sample = next(iter(data_iter))
+    extras = extras_fn(sample.shape[0]) if extras_fn else {}
+    extras_keys = tuple(extras.keys())
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=remat,
+                                      extras_keys=extras_keys))
+    losses = []
+    t0 = time.perf_counter()
+    n_tokens = 0
+    it = iter(data_iter)
+    for step in range(steps):
+        batch = jnp.asarray(next(it))
+        extra_vals = tuple(extras[k] for k in extras_keys)
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             *extra_vals)
+        n_tokens += batch.size
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if log_every and step % log_every == 0:
+            print(f"step {step:5d}  loss {loss:8.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}")
+        if checkpoint_dir and checkpoint_every and \
+                (step + 1) % checkpoint_every == 0:
+            ckpt.save(checkpoint_dir, step + 1, params, opt_state)
+    dt = time.perf_counter() - t0
+    return TrainResult(losses, steps, n_tokens / dt)

@@ -1,0 +1,110 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles.
+
+Kernels execute in interpret mode (CPU container; TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- grouped_matmul
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("g,m,k,n", [
+    (1, 8, 16, 8), (4, 32, 64, 16), (3, 128, 256, 128),
+    (8, 16, 128, 256), (2, 100, 60, 28),  # non-MXU-aligned shapes
+])
+def test_grouped_matmul(g, m, k, n, dtype):
+    kx, kw = jax.random.split(jax.random.fold_in(KEY, g * m + n))
+    x = jax.random.normal(kx, (g, m, k), dtype)
+    w = jax.random.normal(kw, (g, k, n), dtype)
+    got = ops.grouped_matmul(x, w)
+    want = ref.grouped_matmul_ref(x, w)
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_mlp(dtype):
+    E, C, d, f = 4, 32, 64, 96
+    ks = jax.random.split(KEY, 4)
+    xe = jax.random.normal(ks[0], (E, C, d), dtype) * 0.5
+    w1 = jax.random.normal(ks[1], (E, d, f), dtype) * 0.1
+    w3 = jax.random.normal(ks[2], (E, d, f), dtype) * 0.1
+    w2 = jax.random.normal(ks[3], (E, f, d), dtype) * 0.1
+    got = ops.grouped_mlp(xe, w1, w3, w2)
+    want = ref.grouped_mlp_ref(xe, w1, w3, w2)
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                    atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+# ---------------------------------------------------------------- gating_topk
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,e,k", [
+    (8, 16, 4, 2), (256, 64, 8, 2), (512, 128, 60, 4), (128, 32, 128, 2),
+    (96, 48, 16, 4),  # T not a multiple of the tile
+])
+def test_gating_topk(t, d, e, k, dtype):
+    kx, kw = jax.random.split(jax.random.fold_in(KEY, t + e))
+    x = jax.random.normal(kx, (t, d), dtype)
+    w = jax.random.normal(kw, (d, e), jnp.float32)
+    gates, experts, counts = ops.gating_topk(x, w, k)
+    rg, re, rc = ref.gating_topk_ref(x, w, k)
+    # expert ids must match exactly (ties are measure-zero with random data)
+    np.testing.assert_array_equal(np.asarray(experts), np.asarray(re))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(rc))
+    assert_allclose(np.asarray(gates), np.asarray(rg), rtol=1e-4, atol=1e-4)
+    # invariants
+    assert int(counts.sum()) == t * k
+    assert_allclose(np.asarray(gates.sum(-1)), np.ones(t), rtol=1e-5)
+
+
+# ---------------------------------------------------------------- decode_attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,hd,w,window,cap", [
+    (2, 4, 2, 16, 32, 0, 0.0),
+    (1, 8, 1, 64, 128, 0, 0.0),      # MQA
+    (2, 4, 4, 32, 64, 16, 0.0),      # MHA + sliding window
+    (2, 8, 2, 128, 512, 0, 50.0),    # softcap (gemma2)
+    (1, 4, 2, 16, 48, 0, 0.0),       # W not a power of two
+])
+def test_decode_attention(b, h, hkv, hd, w, window, cap, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, b * w + h), 4)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    kc = jax.random.normal(ks[1], (b, w, hkv, hd), dtype)
+    vc = jax.random.normal(ks[2], (b, w, hkv, hd), dtype)
+    # ring-buffer style positions with some empty (-1) slots
+    pos = jnp.asarray(np.random.RandomState(0).randint(w // 2, w, size=(b,)),
+                      jnp.int32)
+    cache_pos = jnp.broadcast_to(jnp.arange(w, dtype=jnp.int32), (b, w))
+    cache_pos = jnp.where(cache_pos <= pos[:, None], cache_pos, -1)
+    got = ops.decode_attention(q, kc, vc, cache_pos, pos, window=window,
+                               attn_softcap=cap)
+    want = ref.decode_attention_ref(q, kc, vc, cache_pos, pos, window=window,
+                                    attn_softcap=cap)
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    **_tol(dtype))
+
+
+def test_decode_attention_long_blocked():
+    """KV length much larger than the block: exercises online-softmax carry."""
+    b, h, hkv, hd, w = 1, 2, 1, 16, 4096
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    kc = jax.random.normal(ks[1], (b, w, hkv, hd))
+    vc = jax.random.normal(ks[2], (b, w, hkv, hd))
+    pos = jnp.full((b,), w - 1, jnp.int32)
+    cache_pos = jnp.broadcast_to(jnp.arange(w, dtype=jnp.int32), (b, w))
+    got = ops.decode_attention(q, kc, vc, cache_pos, pos, wb=256)
+    want = ref.decode_attention_ref(q, kc, vc, cache_pos, pos)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,226 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import MoEConfig
+from repro.models import moe as moe_lib
+from repro.models.attention import attention, decode_attention
+from repro.models.common import apply_rope, causal_mask_bias, rms_norm
+from repro.models.rglru import linear_recurrence
+from repro.models.ssd import segsum, ssd_chunked
+
+
+# ------------------------------------------------------------------ routing
+class TestRoutingInvariants:
+    @given(st.integers(1, 64), st.integers(2, 32), st.integers(1, 4),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_route_valid(self, t, e, k, seed):
+        k = min(k, e)
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (t, 8))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (8, e))
+        r = moe_lib.route(x, w, k)
+        assert r.experts.shape == (t, k)
+        assert (np.asarray(r.experts) >= 0).all()
+        assert (np.asarray(r.experts) < e).all()
+        # top-k experts are distinct per token
+        for row in np.asarray(r.experts):
+            assert len(set(row.tolist())) == k
+        # normalized combine weights
+        np.testing.assert_allclose(np.asarray(r.gates.sum(-1)), 1.0,
+                                   atol=1e-5)
+
+    @given(st.integers(2, 48), st.integers(2, 16), st.integers(1, 4),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_dispatch_conservation_full_capacity(self, t, e, k, seed):
+        """With capacity = T (drop-free), every (token, k) pair lands in
+        exactly one expert slot and combine weights are conserved."""
+        k = min(k, e)
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (t, 8))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (8, e))
+        r = moe_lib.route(x, w, k)
+        idx_buf, gate_buf = moe_lib.dispatch_indices(r, e, t)
+        filled = np.asarray(idx_buf) < t
+        assert filled.sum() == t * k, "a routed token was dropped"
+        np.testing.assert_allclose(float(gate_buf.sum()), t, atol=1e-4)
+        # every filled slot points at a real token routed to that expert
+        ib = np.asarray(idx_buf)
+        ex = np.asarray(r.experts)
+        for e_i in range(e):
+            for tok in ib[e_i][filled[e_i]]:
+                assert e_i in ex[tok]
+
+    def test_identity_experts_reconstruct_input(self):
+        """With experts acting as identity, MoE output == input (gates sum
+        to 1)."""
+        t, d, e, k = 16, 8, 4, 2
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (t, d))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (d, e))
+        r = moe_lib.route(x, w, k)
+        idx_buf, gate_buf = moe_lib.dispatch_indices(r, e, t)
+        xe = x.at[idx_buf].get(mode="fill", fill_value=0)  # identity experts
+        y = jnp.zeros((t, d))
+        y = y.at[idx_buf.reshape(-1)].add(
+            (xe * gate_buf[..., None]).reshape(-1, d), mode="drop")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-5)
+
+    @given(st.integers(8, 512), st.integers(2, 64), st.integers(1, 4),
+           st.sampled_from(["train", "eval", "full"]))
+    @settings(max_examples=60, deadline=None)
+    def test_capacity_bounds(self, t, e, k, mode):
+        cfg = MoEConfig(n_experts=e, top_k=min(k, e), d_ff_expert=8)
+        c = moe_lib.expert_capacity(t, cfg, mode)
+        assert 1 <= c <= t
+        if mode == "full":
+            assert c == t
+
+
+# ---------------------------------------------------------------- attention
+class TestAttentionInvariants:
+    @given(st.integers(2, 24), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_causality(self, t, seed):
+        """Output at position i is unchanged by perturbing tokens > i."""
+        key = jax.random.PRNGKey(seed)
+        B, H, hd = 1, 2, 8
+        q = jax.random.normal(key, (B, t, H, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, t, H, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, t, H, hd))
+        pos = jnp.broadcast_to(jnp.arange(t), (B, t))
+        out = attention(q, k, v, pos, pos)
+        i = t // 2
+        k2 = k.at[:, i + 1:].set(99.0)
+        v2 = v.at[:, i + 1:].set(-99.0)
+        out2 = attention(q, k2, v2, pos, pos)
+        np.testing.assert_allclose(np.asarray(out[:, :i + 1]),
+                                   np.asarray(out2[:, :i + 1]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_window_ge_seq_equals_full(self):
+        key = jax.random.PRNGKey(3)
+        B, t, H, hd = 2, 16, 4, 8
+        q = jax.random.normal(key, (B, t, H, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, t, 2, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, t, 2, hd))
+        pos = jnp.broadcast_to(jnp.arange(t), (B, t))
+        full = attention(q, k, v, pos, pos, window=0)
+        win = attention(q, k, v, pos, pos, window=t)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(win),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_chunked_equals_unchunked(self):
+        key = jax.random.PRNGKey(4)
+        B, t, H, hd = 1, 50, 2, 8
+        q = jax.random.normal(key, (B, t, H, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, t, H, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, t, H, hd))
+        pos = jnp.broadcast_to(jnp.arange(t), (B, t))
+        a = attention(q, k, v, pos, pos, q_chunk=1024)
+        b = attention(q, k, v, pos, pos, q_chunk=16)  # 50 -> 4 padded chunks
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+    @given(st.integers(1, 30), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_ring_buffer_decode_equals_dense(self, pos_i, seed):
+        """Decode attention over a ring cache == dense attention over the
+        valid prefix."""
+        key = jax.random.PRNGKey(seed)
+        B, H, Hkv, hd, W = 1, 4, 2, 8, 32
+        q = jax.random.normal(key, (B, H, hd))
+        kc = jax.random.normal(jax.random.fold_in(key, 1), (B, W, Hkv, hd))
+        vc = jax.random.normal(jax.random.fold_in(key, 2), (B, W, Hkv, hd))
+        cache_pos = jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32), (B, W))
+        cache_pos = jnp.where(cache_pos <= pos_i, cache_pos, -1)
+        pos = jnp.full((B,), pos_i, jnp.int32)
+        out = decode_attention(q, kc, vc, cache_pos, pos)
+        # dense reference over the valid prefix
+        n = pos_i + 1
+        ref = attention(q[:, None], kc[:, :n], vc[:, :n],
+                        jnp.full((B, 1), pos_i), cache_pos[:, :n])[:, 0]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_rope_preserves_norm(self):
+        key = jax.random.PRNGKey(5)
+        x = jax.random.normal(key, (2, 6, 4, 16))
+        pos = jnp.broadcast_to(jnp.arange(6), (2, 6))
+        y = apply_rope(x, pos, 10000.0)
+        np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                                   np.linalg.norm(np.asarray(y), axis=-1),
+                                   rtol=1e-5)
+
+
+# -------------------------------------------------------------- recurrences
+class TestRecurrences:
+    @given(st.integers(2, 40), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_linear_recurrence_matches_sequential(self, t, seed):
+        key = jax.random.PRNGKey(seed)
+        B, W = 2, 4
+        a = jax.random.uniform(key, (B, t, W), minval=0.1, maxval=0.99)
+        b = jax.random.normal(jax.random.fold_in(key, 1), (B, t, W))
+        h0 = jax.random.normal(jax.random.fold_in(key, 2), (B, W))
+        h, h_last = linear_recurrence(a, b, h0)
+        want = np.zeros((B, t, W))
+        cur = np.asarray(h0)
+        an, bn = np.asarray(a), np.asarray(b)
+        for i in range(t):
+            cur = an[:, i] * cur + bn[:, i]
+            want[:, i] = cur
+        np.testing.assert_allclose(np.asarray(h), want, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h_last), want[:, -1], rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_segsum(self):
+        x = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+        s = np.asarray(segsum(x))
+        assert s[2, 0] == pytest.approx(2 + 3)   # sum_{k=1..2}
+        assert s[3, 0] == pytest.approx(2 + 3 + 4)
+        assert s[1, 1] == pytest.approx(0.0)
+        assert np.isneginf(s[0, 1])
+
+    @given(st.integers(3, 24), st.sampled_from([2, 4, 8]),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_ssd_chunked_matches_stepwise(self, t, chunk, seed):
+        """Chunked SSD == naive per-step state recurrence."""
+        key = jax.random.PRNGKey(seed)
+        b, h, p, n = 1, 2, 4, 3
+        x = jax.random.normal(key, (b, t, h, p)) * 0.5
+        dtA = -jax.random.uniform(jax.random.fold_in(key, 1), (b, t, h),
+                                  minval=0.01, maxval=1.0)
+        B = jax.random.normal(jax.random.fold_in(key, 2), (b, t, n)) * 0.5
+        C = jax.random.normal(jax.random.fold_in(key, 3), (b, t, n)) * 0.5
+        y, final = ssd_chunked(x, dtA, B, C, chunk)
+        # stepwise reference: h_t = exp(dtA_t) h_{t-1} + B_t (x) x_t
+        state = np.zeros((b, h, p, n))
+        xn, an = np.asarray(x, np.float64), np.asarray(dtA, np.float64)
+        Bn, Cn = np.asarray(B, np.float64), np.asarray(C, np.float64)
+        ys = np.zeros((b, t, h, p))
+        for i in range(t):
+            decay = np.exp(an[:, i])[:, :, None, None]
+            upd = xn[:, i, :, :, None] * Bn[:, i, None, None, :]
+            state = state * decay + upd
+            ys[:, i] = np.einsum("bhpn,bn->bhp", state, Cn[:, i])
+        np.testing.assert_allclose(np.asarray(y), ys, rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(final), state, rtol=2e-3,
+                                   atol=2e-3)
+
+
+# ------------------------------------------------------------------- norms
+class TestNorms:
+    @given(st.integers(1, 8), st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_rmsnorm_unit_rms(self, b, d, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (b, d)) * 10
+        y = rms_norm(x, jnp.zeros((d,)))
+        rms = np.sqrt(np.mean(np.square(np.asarray(y, np.float64)), -1))
+        np.testing.assert_allclose(rms, 1.0, atol=1e-3)
