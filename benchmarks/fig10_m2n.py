@@ -15,7 +15,6 @@ can measure:
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from repro.kernels import ops, ref

@@ -9,11 +9,8 @@ per-batch jitter term that compounds with group count, and validate the
 M2N MoE moves exactly T*d bytes per hop regardless of N."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit
-from benchmarks.fig10_m2n import (M2N_ALPHA, NCCL_ALPHA, NCCL_GROUP, NET_BW,
-                                  m2n_one_to_n, nccl_one_to_n)
+from benchmarks.fig10_m2n import NCCL_GROUP, m2n_one_to_n, nccl_one_to_n
 from repro.core.m2n import m2n_traffic_bytes
 
 JITTER_P99 = 120e-6  # per group-batch sync jitter at P99 (calibrated)

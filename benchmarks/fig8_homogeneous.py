@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from benchmarks.common import emit
 from repro.config import get_config
-from repro.core import pingpong
 from repro.core.planner import (HARDWARE, attn_time, attn_param_bytes,
                                 expert_param_bytes, expert_time, comm_time,
                                 kv_bytes_per_token, search_plan)

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from benchmarks.common import emit
 from repro.config import get_config
-from repro.core.planner import HARDWARE, search_heterogeneous, search_plan
+from repro.core.planner import HARDWARE, search_heterogeneous
 from benchmarks.fig8_homogeneous import monolithic_throughput
 
 

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit
 from repro.core.load_balance import balance_experts
 
 

@@ -1,26 +1,85 @@
 """End-to-end serving benchmark on CPU at reduced scale: monolithic vs
-disaggregated runtime, batched continuous serving.
+disaggregated vs ping-pong micro-batched serving, batched continuous
+requests.
 
 On one CPU device the disaggregated runtime cannot show wall-clock
-overlap (no parallel hardware) — this benchmark validates correctness
-of the full serving path and reports both throughputs; the *modeled*
-gain is in fig8/fig12."""
+overlap (no parallel hardware) — this benchmark validates correctness of
+the full serving path and reports all throughputs plus the ping-pong
+runtime's per-stage timing decomposition; the *modeled* gain is in
+fig8/fig12.
+
+``python -m benchmarks.serve_bench --out BENCH_serve.json`` additionally
+writes the machine-readable baseline used to track the serving perf
+trajectory across PRs.
+"""
 from __future__ import annotations
+
+import argparse
+import json
 
 from benchmarks.common import emit
 from repro.launch.serve import run as serve_run
 
+CONFIGS = (
+    ("monolithic", {}),
+    ("disagg", {}),
+    ("pingpong", {}),
+    ("pingpong_m2n", {"use_m2n": True}),
+)
+
+
+def collect() -> dict:
+    results = {}
+    for name, extra in CONFIGS:
+        runtime = "pingpong" if name.startswith("pingpong") else name
+        stats = serve_run("mixtral-8x22b", use_reduced=True, runtime=runtime,
+                          n_requests=6, max_new=4, max_batch=4, max_seq=64,
+                          microbatches=2, verbose=False, **extra)
+        entry = {k: stats[k] for k in ("tokens", "decode_iters", "wall_s",
+                                       "decode_tok_per_s", "finished")}
+        if "stages" in stats:
+            entry["stages"] = {k: v for k, v in stats["stages"].items()
+                               if k in ("t_a", "t_e", "t_c")}
+        results[name] = entry
+    mono = results["monolithic"]["decode_tok_per_s"]
+    for name in results:
+        results[name]["vs_monolithic"] = (
+            results[name]["decode_tok_per_s"] / max(mono, 1e-9))
+    return results
+
 
 def run():
-    for runtime in ("monolithic", "disagg"):
-        stats = serve_run("mixtral-8x22b", use_reduced=True, runtime=runtime,
-                          n_requests=6, max_new=4, max_batch=3, max_seq=64,
-                          microbatches=2, verbose=False)
-        emit(f"serve_{runtime}", 1e6 / max(stats["decode_tok_per_s"], 1e-9),
-             f"{stats['tokens']} tokens, {stats['decode_iters']} decode "
-             f"iters, {stats['decode_tok_per_s']:.1f} tok/s (reduced "
-             f"mixtral, CPU)")
+    results = collect()
+    for name, r in results.items():
+        emit(f"serve_{name}", 1e6 / max(r["decode_tok_per_s"], 1e-9),
+             f"{r['tokens']} tokens, {r['decode_iters']} decode iters, "
+             f"{r['decode_tok_per_s']:.1f} tok/s, "
+             f"{r['vs_monolithic']:.2f}x vs monolithic (reduced mixtral, CPU)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="write results as JSON (e.g. BENCH_serve.json)")
+    args = ap.parse_args()
+    results = collect()
+    for name, r in results.items():
+        print(f"{name}: {r['decode_tok_per_s']:.1f} tok/s "
+              f"({r['vs_monolithic']:.2f}x vs monolithic)")
+    if args.out:
+        payload = {
+            "benchmark": "serve_bench",
+            "workload": {"arch": "mixtral-8x22b", "reduced": True,
+                         "n_requests": 6, "max_new": 4, "max_batch": 4,
+                         "max_seq": 64, "microbatches": 2,
+                         "device": "cpu"},
+            "results": results,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -8,7 +8,7 @@ import argparse
 
 from repro.config import get_config
 from repro.core import pingpong
-from repro.core.planner import HARDWARE, search_heterogeneous, search_plan
+from repro.core.planner import search_heterogeneous, search_plan
 
 
 def main():

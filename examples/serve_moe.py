@@ -1,18 +1,19 @@
 """End-to-end serving driver (the paper's scenario): serve a small MoE
-model with batched requests through BOTH runtimes and verify they agree
+model with batched requests through the monolithic engine, the
+disaggregated runtime, and the full ping-pong micro-batched pipeline
+(with and without the shard_map M2N dispatch), and verify they agree
 token-for-token.
 
   PYTHONPATH=src python examples/serve_moe.py [--arch qwen2-moe-a2.7b]
 """
 import argparse
 
-from repro.launch.serve import run as serve_run
-
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-moe-a2.7b")
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=3)
     args = ap.parse_args()
 
     import jax
@@ -28,23 +29,34 @@ def main():
     prompts = [rng.randint(2, cfg.vocab, size=rng.randint(2, 10)).tolist()
                for _ in range(args.requests)]
 
-    def serve(decode_fn, label):
-        eng = Engine(cfg, params, max_batch=4, max_seq=128,
-                     decode_fn=decode_fn)
+    def serve(label, **engine_kw):
+        eng = Engine(cfg, params, max_batch=4, max_seq=128, **engine_kw)
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p, max_new_tokens=8))
         done = {r.rid: r.generated for r in eng.run_until_done()}
-        print(f"[{label}] {eng.stats()}")
+        stats = eng.stats()
+        stats.pop("stages", None)  # keep the line short
+        print(f"[{label}] {stats}")
         return done
 
-    mono = serve(None, "monolithic")
-    inst = DisaggregatedInstance(cfg, params,
-                                 plan=DisaggPlan(n_microbatches=3))
-    disagg = serve(inst.decode_step, "disaggregated m=3")
-    agree = sum(mono[i] == disagg[i] for i in mono)
-    print(f"\ntoken-for-token agreement: {agree}/{len(mono)} requests")
-    assert agree == len(mono), "runtimes diverged!"
-    print("disaggregated expert parallelism == monolithic reference ✓")
+    mono = serve("monolithic")
+    inst = DisaggregatedInstance(
+        cfg, params, plan=DisaggPlan(n_microbatches=args.microbatches))
+    runs = {"disaggregated decode_fn": serve("disaggregated decode_fn",
+                                             decode_fn=inst.decode_step)}
+    runs[f"ping-pong m={args.microbatches}"] = serve(
+        f"ping-pong m={args.microbatches}", mode="pingpong", runtime=inst)
+    inst_m2n = DisaggregatedInstance(
+        cfg, params, plan=DisaggPlan(n_microbatches=args.microbatches,
+                                     use_m2n=True))
+    runs["ping-pong + M2N"] = serve("ping-pong + M2N", mode="pingpong",
+                                    runtime=inst_m2n)
+
+    for label, toks in runs.items():
+        agree = sum(mono[i] == toks[i] for i in mono)
+        print(f"token-for-token agreement [{label}]: {agree}/{len(mono)}")
+        assert agree == len(mono), f"{label} diverged from monolithic!"
+    print("ping-pong disaggregated serving == monolithic reference ✓")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ import dataclasses
 
 import jax
 
-from repro.config import MoEConfig, get_config
+from repro.config import get_config
 from repro.models import init_params
 from repro.training.data import DataConfig, SyntheticLM
 from repro.training.loop import train

@@ -1,7 +1,5 @@
 """Splice generated tables into EXPERIMENTS.md at the marker comments."""
-import io
 import sys
-from contextlib import redirect_stdout
 
 sys.path.insert(0, "src")
 from repro.analysis import report  # noqa: E402

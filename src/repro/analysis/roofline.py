@@ -17,9 +17,8 @@ Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12        # bf16 / chip

@@ -28,7 +28,8 @@ stage here and are served by the monolithic engine instead.
 """
 from __future__ import annotations
 
-import math
+import time
+from collections import deque
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
@@ -38,15 +39,19 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import ModelConfig
-from repro.core.pingpong import build_schedule
+from repro.core import m2n as m2n_lib
+from repro.core import pingpong
 from repro.models import moe as moe_lib
 from repro.models.common import rms_norm
 from repro.models.ffn import gated_ffn
-from repro.models.transformer import (_lm_head, _embed_tokens,
-                                      ffn_decode_sublayer,
+from repro.models.transformer import (_lm_head, _embed_tokens, init_cache,
                                       self_attn_decode_sublayer)
 
 EXPERT_KEYS = ("we1", "we3", "we2")
+
+# pipeline stages timed by the runtime (attention compute, M2N dispatch
+# hop, expert compute, N2M return hop, attention-side combine)
+STAGES = ("attn", "m2n", "expert", "n2m", "combine")
 
 
 def _layer_index(cfg: ModelConfig, l: int):
@@ -78,6 +83,13 @@ class DisaggPlan:
     # route the expert GEMMs through the Pallas grouped_matmul kernel
     # (interpret mode on CPU; real kernel on TPU) — §6 "fused kernels"
     use_kernels: bool = False
+    # route MoE layers through the shard_map M2N dispatch (repro.core.m2n):
+    # routing is computed per expert shard, only locally-owned tokens are
+    # gathered, and the combine is the single psum over the expert axis
+    use_m2n: bool = False
+    # block after every stage so stage_report() reflects device wall time
+    # (accurate but serialising; leave False to keep the pipeline async)
+    profile_stages: bool = False
 
 
 class DisaggregatedInstance:
@@ -86,7 +98,10 @@ class DisaggregatedInstance:
     def __init__(self, cfg: ModelConfig, params: dict,
                  attn_devices: Optional[Sequence] = None,
                  expert_devices: Optional[Sequence] = None,
-                 plan: DisaggPlan = DisaggPlan()):
+                 plan: Optional[DisaggPlan] = None):
+        # plans are mutated in place (auto-m, profile toggling), so each
+        # instance must own its own default rather than share one
+        plan = plan if plan is not None else DisaggPlan()
         for kind in cfg.block_pattern + cfg.remainder_pattern:
             if kind not in ("attn", "local"):
                 raise NotImplementedError(
@@ -134,13 +149,23 @@ class DisaggregatedInstance:
             self.expert_in_spec = P()           # (T, d) replicated (TP FFN)
         self.layers_expert = [
             jax.device_put(le, ep_shard) for le in self.layers_expert]
+        # the M2N path computes routing on the expert shards (replicated
+        # over "ep"), so each MoE layer's router also lives on that mesh
+        self.layers_router_ep: List[Optional[jax.Array]] = [None] * cfg.n_layers
+        if cfg.moe is not None and plan.use_m2n:
+            rep_e = NamedSharding(self.expert_mesh, P())
+            self.layers_router_ep = [
+                jax.device_put(_slice_layer_params(params, cfg, l)["router"],
+                               rep_e)
+                for l in range(cfg.n_layers)]
 
+        self.reset_stage_times()
+        self.last_trace: List[tuple] = []
         self._build_jits()
 
     # ------------------------------------------------------------------ jits
     def _build_jits(self):
         cfg = self.cfg
-        dp = NamedSharding(self.attn_mesh, P("dp"))
         rep_e = NamedSharding(self.expert_mesh, P())
 
         def attn_phase(p, x, cache, pos, window):
@@ -148,7 +173,9 @@ class DisaggregatedInstance:
                                                          cache, window)
             x = x + delta
             h = rms_norm(x, p["ln2"])
-            if cfg.moe is None:
+            if cfg.moe is None or self.plan.use_m2n:
+                # m2n: routing+dispatch happen on the expert shards; only
+                # the (T, d) activations cross the wire
                 return x, h, new_cache, None
             routing = moe_lib.route(h, p["router"], cfg.moe.top_k)
             cap = moe_lib.expert_capacity(h.shape[0], cfg.moe,
@@ -172,12 +199,14 @@ class DisaggregatedInstance:
         def expert_phase_dense(pe, h):
             return gated_ffn(h, pe["w1"], pe["w3"], pe["w2"], cfg.act)
 
-        def combine_phase(p, x, h, out, idx_buf, gate_buf):
-            T, d = x.shape
-            y = jnp.zeros((T, d), jnp.float32)
-            w = out.astype(jnp.float32) * gate_buf[..., None]
-            y = y.at[idx_buf.reshape(-1)].add(w.reshape(-1, d), mode="drop")
-            y = y.astype(x.dtype)
+        def expert_phase_m2n(pe, router_w, h):
+            y, _aux = m2n_lib.sharded_routed_experts(
+                dict(pe, router=router_w), h, cfg.moe, cfg.act,
+                self.plan.capacity_mode, mesh=self.expert_mesh,
+                data_axes=(), expert_axis="ep")
+            return y
+
+        def combine_tail(p, x, h, y):
             if "ws1" in p:   # shared experts stay with attention (dense)
                 shared = gated_ffn(h, p["ws1"], p["ws3"], p["ws2"], cfg.act)
                 g = jax.nn.sigmoid(h.astype(jnp.float32)
@@ -188,6 +217,18 @@ class DisaggregatedInstance:
             if cfg.use_post_norm:
                 y = rms_norm(y, p["ln2_post"])
             return x + y
+
+        def combine_phase(p, x, h, out, idx_buf, gate_buf):
+            T, d = x.shape
+            y = jnp.zeros((T, d), jnp.float32)
+            w = out.astype(jnp.float32) * gate_buf[..., None]
+            y = y.at[idx_buf.reshape(-1)].add(w.reshape(-1, d), mode="drop")
+            return combine_tail(p, x, h, y.astype(x.dtype))
+
+        def combine_m2n(p, x, h, y):
+            # y: (T, d) routed output, already gate-weighted and combined
+            # on the expert shards
+            return combine_tail(p, x, h, y)
 
         def combine_dense(p, x, out):
             if cfg.use_post_norm:
@@ -204,7 +245,13 @@ class DisaggregatedInstance:
             w: jax.jit(lambda p, x, c, pos, w=w: attn_phase(p, x, c, pos, w))
             for w in {0, cfg.window}}
         ein = NamedSharding(self.expert_mesh, self.expert_in_spec)
-        if cfg.moe is not None:
+        if cfg.moe is not None and self.plan.use_m2n:
+            # tokens arrive replicated on the expert mesh; the shard_map
+            # inside does the only wire traffic (the combine psum)
+            ein = rep_e
+            self._expert_phase = jax.jit(expert_phase_m2n,
+                                         out_shardings=rep_e)
+        elif cfg.moe is not None:
             self._expert_phase = jax.jit(expert_phase_moe,
                                          in_shardings=(None, ein),
                                          out_shardings=ein)
@@ -213,23 +260,111 @@ class DisaggregatedInstance:
                                          in_shardings=(None, ein),
                                          out_shardings=rep_e)
         self._combine = jax.jit(combine_phase)
+        self._combine_m2n = jax.jit(combine_m2n)
         self._combine_dense = jax.jit(combine_dense)
         self._embed = jax.jit(embed)
         self._lm_head = jax.jit(lm_head)
         self._expert_sharding = ein
         self._attn_rep = NamedSharding(self.attn_mesh, P())
 
+    # ------------------------------------------------------- stage timing
+    def reset_stage_times(self):
+        """Zero the cumulative per-stage wall-clock accounting."""
+        self.stage_times = {s: 0.0 for s in STAGES}
+        self.stage_counts = {s: 0 for s in STAGES}
+
+    def _timed(self, stage: str, fn, *args):
+        """Run one pipeline stage, accounting wall time to ``stage``.
+
+        Non-profiling mode measures host issue time only (the pipeline
+        stays fully async); ``plan.profile_stages`` blocks on the result
+        so the numbers reflect device execution (and serialise the
+        pipeline — use for measurement, not serving)."""
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if self.plan.profile_stages:
+            jax.block_until_ready(out)
+        self.stage_times[stage] += time.perf_counter() - t0
+        self.stage_counts[stage] += 1
+        return out
+
+    def stage_report(self) -> dict:
+        """Cumulative per-stage seconds/counts plus the paper's per-op
+        T_a / T_e / T_c estimates (attention-side compute, expert
+        compute, one communication hop)."""
+        rep = {f"{s}_s": self.stage_times[s] for s in STAGES}
+        rep.update({f"{s}_n": self.stage_counts[s] for s in STAGES})
+        n = max(1, self.stage_counts["attn"])
+        rep["t_a"] = (self.stage_times["attn"]
+                      + self.stage_times["combine"]) / n
+        rep["t_e"] = self.stage_times["expert"] / max(
+            1, self.stage_counts["expert"])
+        n_hops = max(1, self.stage_counts["m2n"] + self.stage_counts["n2m"])
+        rep["t_c"] = (self.stage_times["m2n"]
+                      + self.stage_times["n2m"]) / n_hops
+        return rep
+
+    def measure_stage_times(self, batch: int, max_seq: int = 32) -> dict:
+        """Profile one decode iteration on a throwaway cache and return
+        ``stage_report()`` with device-accurate stage times."""
+        tokens = jnp.zeros((batch,), jnp.int32)
+        pos = jnp.zeros((batch,), jnp.int32)
+        cache = init_cache(self.cfg, batch, max_seq, jnp.float32)
+        prev = self.plan.profile_stages
+        self.plan.profile_stages = True
+        try:
+            self.decode_step(tokens, cache, pos)   # warm-up: jit compiles
+            self.reset_stage_times()
+            logits, _ = self.decode_step(tokens, cache, pos)
+            jax.block_until_ready(logits)
+            report = self.stage_report()
+        finally:
+            self.plan.profile_stages = prev
+            self.reset_stage_times()
+        return report
+
+    def auto_microbatches(self, batch: int, *, max_m: Optional[int] = None,
+                          max_seq: int = 32) -> int:
+        """Measured-T_a/T_e/T_c choice of m (paper eq. 3 feasibility)."""
+        rep = self.measure_stage_times(batch, max_seq)
+        return pingpong.choose_microbatches(rep["t_a"], rep["t_e"],
+                                            rep["t_c"], max_m=max_m)
+
     # ------------------------------------------------------------- decoding
     def decode_step(self, tokens: jax.Array, cache: dict, pos: jax.Array):
         """One decode iteration for the global batch with ping-pong
         micro-batching.  tokens/pos: (B,).  cache: monolithic cache pytree
         (as built by models.init_cache).  Returns (logits, new_cache)."""
+        return self.decode_microbatched(tokens, cache, pos)
+
+    def decode_microbatched(self, tokens: jax.Array, cache: dict,
+                            pos: jax.Array,
+                            mb_slices: Optional[Sequence[slice]] = None):
+        """Schedule-driven ping-pong decode.
+
+        Executes ``pingpong.build_schedule(m, L)`` with double-buffered
+        stages: after attn(mb)+dispatch are issued on the attention mesh
+        and expert(mb) on the expert mesh, the *previous* micro-batch's
+        return hop + combine are issued — so at any moment one micro-batch
+        occupies each compute group and JAX async dispatch overlaps them
+        (the paper's fig. 4 shuttle).  ``mb_slices`` lets the serving
+        engine pin micro-batches to its KV-slot groups; default is a
+        near-even split into ``plan.n_microbatches``.
+
+        The issue order is recorded in ``self.last_trace`` (comparable to
+        ``build_schedule``/simulator events) and per-stage wall time is
+        accumulated for ``stage_report()``."""
         cfg = self.cfg
-        m = self.plan.n_microbatches
         B = tokens.shape[0]
-        sizes = [B // m + (1 if i < B % m else 0) for i in range(m)]
-        offs = np.concatenate([[0], np.cumsum(sizes)]).tolist()
-        mbs = [slice(offs[i], offs[i + 1]) for i in range(m) if sizes[i]]
+        if mb_slices is None:
+            mbs = pingpong.even_partition(B, self.plan.n_microbatches)
+        else:
+            mbs = [s for s in mb_slices if s.stop > s.start]
+            if [s.start for s in mbs] != [0] + [s.stop for s in mbs[:-1]] \
+                    or (mbs and mbs[-1].stop != B):
+                raise ValueError(f"micro-batch slices {mbs} must cover "
+                                 f"[0, {B}) contiguously")
+        trace = []
 
         xs = [self._embed(self.head, tokens[s]) for s in mbs]
         poss = [pos[s] for s in mbs]
@@ -241,30 +376,51 @@ class DisaggregatedInstance:
             window = cfg.window if kind == "local" else 0
             pa = self.layers_attn[l]
             pe = self.layers_expert[l]
-            pending = []
+            inflight: deque = deque()
+
+            def drain_one():
+                i, x, h, out, disp = inflight.popleft()
+                out_back = self._timed(                        # N2M return
+                    "n2m", jax.device_put, out, self._attn_rep)
+                if cfg.moe is not None and self.plan.use_m2n:
+                    xs[i] = self._timed("combine", self._combine_m2n,
+                                        pa, x, h, out_back)
+                elif cfg.moe is not None:
+                    xs[i] = self._timed("combine", self._combine, pa, x, h,
+                                        out_back, disp["idx"], disp["gates"])
+                else:
+                    xs[i] = self._timed("combine", self._combine_dense,
+                                        pa, x, out_back)
+
             for i, s in enumerate(mbs):
                 entry = self._cache_entry(cache, l, s)
-                x, h, new_entry, disp = self._attn_phase[window](
-                    pa, xs[i], entry, poss[i])
+                x, h, new_entry, disp = self._timed(
+                    "attn", self._attn_phase[window], pa, xs[i], entry,
+                    poss[i])
                 new_cache_entries[i][l] = new_entry
-                if cfg.moe is not None:
-                    buf = jax.device_put(disp["xe"], self._expert_sharding)
-                    out = self._expert_phase(pe, buf)            # expert mesh
-                    pending.append((i, x, h, out, disp))
+                trace.append(("attn", i, l))
+                # M2N dispatch hop: routed capacity buffers in the
+                # baseline path, raw (T, d) activations in the m2n path
+                payload = h if disp is None else disp["xe"]
+                buf = self._timed("m2n", jax.device_put, payload,
+                                  self._expert_sharding)
+                if cfg.moe is not None and self.plan.use_m2n:
+                    out = self._timed("expert", self._expert_phase, pe,
+                                      self.layers_router_ep[l], buf)
                 else:
-                    buf = jax.device_put(h, self._expert_sharding)
-                    out = self._expert_phase(pe, buf)
-                    pending.append((i, x, h, out, None))
-            for (i, x, h, out, disp) in pending:
-                out_back = jax.device_put(out, self._attn_rep)   # N2M
-                if cfg.moe is not None:
-                    xs[i] = self._combine(pa, x, h, out_back, disp["idx"],
-                                          disp["gates"])
-                else:
-                    xs[i] = self._combine_dense(pa, x, out_back)
+                    out = self._timed("expert", self._expert_phase, pe, buf)
+                trace.append(("expert", i, l))
+                inflight.append((i, x, h, out, disp))
+                # double buffer: one micro-batch computing on the expert
+                # group, one returning/combining on the attention group
+                if len(inflight) > 1:
+                    drain_one()
+            while inflight:
+                drain_one()
 
         logits = jnp.concatenate([self._lm_head(self.head, x) for x in xs], 0)
         new_cache = self._merge_cache(cache, new_cache_entries, mbs)
+        self.last_trace = trace
         return logits, new_cache
 
     # ------------------------------------------------------------- plumbing

@@ -11,8 +11,7 @@ per-node level, processing experts in descending cost (LPT).
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import List
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -36,8 +35,6 @@ def balance_experts(loads, n_nodes: int, cold_floor: float = 1.0,
     costs = np.maximum(np.asarray(loads, dtype=np.float64), cold_floor)
     M = len(costs)
     total = costs.sum()
-    ideal = max(total / n_nodes, costs.max() if not allow_replication else
-                total / n_nodes)
     frac = np.zeros((M, n_nodes))
     node_cost = np.zeros(n_nodes)
     # heap of (cost, node)

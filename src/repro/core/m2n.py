@@ -25,13 +25,17 @@ MoE layer in the model then routes through this path.
 from __future__ import annotations
 
 import contextlib
-import math
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+try:  # jax >= 0.6: top-level export, replication check kw is check_vma
+    from jax import shard_map
+    _SHARD_MAP_KWARGS = {"check_vma": False}
+except ImportError:  # jax 0.4.x: experimental location, kw is check_rep
+    from jax.experimental.shard_map import shard_map
+    _SHARD_MAP_KWARGS = {"check_rep": False}
 
 from repro.config import MoEConfig
 from repro.models import moe as moe_lib
@@ -125,7 +129,7 @@ def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
         local_fn, mesh=mesh,
         in_specs=(P(dtuple, None), P(None, None)) + w_specs,
         out_specs=(P(dtuple, None), P()),
-        check_vma=False,
+        **_SHARD_MAP_KWARGS,
     )
     return fn(x, router_w, we1, we3, we2)
 

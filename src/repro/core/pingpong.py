@@ -8,8 +8,6 @@ runtime (``repro.core.disagg``) to order micro-batch work.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
 import math
 from dataclasses import dataclass
 from typing import List, Tuple
@@ -18,6 +16,21 @@ from typing import List, Tuple
 def min_microbatches(t_c: float, t_f: float) -> int:
     """Paper: m >= 2 * (1 + T_c / T_f).  3 for fast nets, 4 for slow."""
     return max(1, math.ceil(2.0 * (1.0 + t_c / t_f)))
+
+
+def choose_microbatches(t_a: float, t_e: float, t_c: float, *,
+                        max_m: int | None = None) -> int:
+    """Pick the runtime micro-batch count from measured stage times.
+
+    Applies the paper's feasibility bound ``min_microbatches`` to the
+    measured T_a/T_e/T_c of one profiled decode iteration, clamped to
+    ``max_m`` (the engine cannot split the batch into more micro-batches
+    than it has KV slots)."""
+    t_f = max(t_a, t_e, 1e-12)
+    m = min_microbatches(t_c, t_f)
+    if max_m is not None:
+        m = min(m, max(1, max_m))
+    return max(1, m)
 
 
 def conditions_met(t_a: float, t_e: float, t_c: float, m: int,
@@ -107,6 +120,22 @@ def throughput(global_batch: int, t_total: float) -> float:
     return global_batch / t_total
 
 
+def even_partition(n: int, m: int) -> List[slice]:
+    """Split ``n`` rows into <= m contiguous near-even slices (sizes
+    differ by at most one).  Used for both the runtime's default
+    micro-batch split and the engine's KV slot groups — one algorithm,
+    so engine groups and runtime micro-batches can never desynchronise.
+    """
+    m = max(1, min(m, n))
+    base, extra = divmod(n, m)
+    out, start = [], 0
+    for i in range(m):
+        size = base + (1 if i < extra else 0)
+        out.append(slice(start, start + size))
+        start += size
+    return out
+
+
 def build_schedule(m: int, n_layers: int) -> List[Tuple[str, int, int]]:
     """Op order for the disaggregated runtime: [(phase, mb, layer), ...].
 
@@ -119,3 +148,14 @@ def build_schedule(m: int, n_layers: int) -> List[Tuple[str, int, int]]:
             ops.append(("attn", mb, layer))
             ops.append(("expert", mb, layer))
     return ops
+
+
+def schedule_from_events(events) -> List[Tuple[str, int, int]]:
+    """Project simulator events onto the runtime op order.
+
+    ``events`` is ``SimResult.events`` from ``simulate_pingpong(...,
+    record_events=True)``; the returned [(phase, mb, layer), ...] list is
+    directly comparable with ``build_schedule`` and with the issue trace
+    the disaggregated runtime records (``DisaggregatedInstance.last_trace``).
+    """
+    return [(phase, mb, layer) for (_, _, phase, mb, layer) in events]

@@ -15,8 +15,6 @@ inventory of Table 2 — each GEMM contributes max(flops/F, bytes/BW).
 """
 from __future__ import annotations
 
-import dataclasses
-import math
 from dataclasses import dataclass
 from typing import Optional
 

@@ -18,7 +18,6 @@ import argparse
 import dataclasses
 import json
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +30,7 @@ from repro.core import m2n
 from repro.launch import sharding as shlib
 from repro.launch.mesh import data_axes, make_production_mesh
 from repro.models import stubs
-from repro.models.transformer import (decode_step, init_cache, init_params,
+from repro.models.transformer import (decode_step, init_params,
                                       prefill)
 from repro.training.loop import make_train_step
 from repro.training.optimizer import AdamWConfig, init_opt_state

@@ -1,9 +1,10 @@
-"""Serving launcher: run the continuous-batching engine over either the
-monolithic decode path or the disaggregated (MegaScale-Infer) runtime.
+"""Serving launcher: run the continuous-batching engine over the
+monolithic decode path, the disaggregated (MegaScale-Infer) runtime, or
+the full ping-pong micro-batched pipeline.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b \
-      --reduced --runtime disagg --requests 16 --microbatches 3
+      --reduced --runtime pingpong --requests 16 --microbatches auto
 """
 from __future__ import annotations
 
@@ -14,37 +15,63 @@ import jax
 import numpy as np
 
 from repro.config import get_config, reduced
-from repro.core.disagg import DisaggPlan, DisaggregatedInstance
+from repro.core.disagg import STAGES, DisaggPlan, DisaggregatedInstance
 from repro.models import init_params
 from repro.serving.engine import Engine, Request
 from repro.serving.sampler import SamplingParams
 
+RUNTIMES = ("monolithic", "disagg", "pingpong")
+
+
+def _format_stages(report: dict) -> str:
+    per_stage = " ".join(
+        f"{s}={report[f'{s}_s'] * 1e3:.1f}ms/{report[f'{s}_n']}"
+        for s in STAGES)
+    return (f"stages: {per_stage} | per-op t_a={report['t_a'] * 1e6:.0f}us "
+            f"t_e={report['t_e'] * 1e6:.0f}us t_c={report['t_c'] * 1e6:.0f}us")
+
 
 def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
         n_requests: int = 8, max_new: int = 8, max_batch: int = 4,
-        max_seq: int = 128, microbatches: int = 3, temperature: float = 0.0,
+        max_seq: int = 128, microbatches: int | str = 3, use_m2n: bool = False,
+        profile_stages: bool = False, temperature: float = 0.0,
         seed: int = 0, verbose: bool = True):
+    if runtime not in RUNTIMES:
+        raise ValueError(f"runtime must be one of {RUNTIMES}, got {runtime!r}")
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg)
     params = init_params(cfg, jax.random.PRNGKey(seed))
 
-    decode_fn = None
-    if runtime == "disagg":
+    engine_kw = {}
+    inst = None
+    if runtime in ("disagg", "pingpong"):
+        m = 2 if microbatches == "auto" else int(microbatches)
         inst = DisaggregatedInstance(
-            cfg, params, plan=DisaggPlan(n_microbatches=microbatches))
-        decode_fn = inst.decode_step
+            cfg, params, plan=DisaggPlan(n_microbatches=m, use_m2n=use_m2n,
+                                         profile_stages=profile_stages))
+        if microbatches == "auto":
+            # measure T_a/T_e/T_c on a profiled decode iteration, then
+            # apply the paper's m >= 2(1 + T_c/T_f) feasibility bound
+            m = inst.auto_microbatches(max_batch, max_m=max_batch)
+            inst.plan.n_microbatches = m
+            if verbose:
+                print(f"auto-selected m={m} micro-batches")
+    if runtime == "disagg":
+        engine_kw["decode_fn"] = inst.decode_step
+    elif runtime == "pingpong":
+        engine_kw.update(mode="pingpong", runtime=inst)
 
     eng = Engine(cfg, params, max_batch=max_batch, max_seq=max_seq,
                  sampling=SamplingParams(temperature=temperature),
-                 decode_fn=decode_fn, seed=seed)
+                 seed=seed, **engine_kw)
     rng = np.random.RandomState(seed)
     for i in range(n_requests):
         plen = int(rng.randint(2, max_seq // 4))
         prompt = rng.randint(2, cfg.vocab, size=plen).tolist()
         eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=max_new))
     t0 = time.perf_counter()
-    done = eng.run_until_done()
+    eng.run_until_done()
     dt = time.perf_counter() - t0
     stats = eng.stats()
     stats["wall_s"] = dt
@@ -54,6 +81,8 @@ def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
               f"{stats['tokens']} tokens in {dt:.2f}s "
               f"({stats['decode_tok_per_s']:.1f} tok/s, "
               f"{stats['decode_iters']} decode iters)")
+        if "stages" in stats:
+            print(_format_stages(stats["stages"]))
     return stats
 
 
@@ -61,19 +90,29 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--runtime", default="monolithic",
-                    choices=["monolithic", "disagg"])
+    ap.add_argument("--runtime", default="monolithic", choices=RUNTIMES)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--microbatches", type=int, default=3)
+    ap.add_argument("--microbatches", default="3",
+                    help="micro-batch count, or 'auto' to pick m from "
+                         "measured T_a/T_e/T_c (paper eq. 3)")
+    ap.add_argument("--use-m2n", action="store_true",
+                    help="route MoE layers through the shard_map M2N "
+                         "dispatch (core.m2n) on the expert mesh")
+    ap.add_argument("--profile-stages", action="store_true",
+                    help="block per stage for device-accurate timings "
+                         "(serialises the pipeline)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
+    mb = args.microbatches if args.microbatches == "auto" \
+        else int(args.microbatches)
     run(args.arch, use_reduced=args.reduced, runtime=args.runtime,
         n_requests=args.requests, max_new=args.max_new,
         max_batch=args.max_batch, max_seq=args.max_seq,
-        microbatches=args.microbatches, temperature=args.temperature)
+        microbatches=mb, use_m2n=args.use_m2n,
+        profile_stages=args.profile_stages, temperature=args.temperature)
 
 
 if __name__ == "__main__":

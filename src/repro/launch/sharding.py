@@ -17,10 +17,8 @@ serves every (arch x shape x mesh) combination.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import ModelConfig

@@ -7,7 +7,6 @@ Shapes use the convention
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -105,7 +105,6 @@ def rglru_block_step(params: dict, x: jax.Array, cfg: RGLRUConfig, act_gelu,
     """Single-token decode.  x: (B, d)."""
     u = x @ params["w_in_x"]                 # (B, W)
     g = x @ params["w_in_gate"]
-    K = params["conv_w"].shape[0]
     xc = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B,K,W)
     uc = jnp.sum(xc.astype(jnp.float32)
                  * params["conv_w"].astype(jnp.float32)[None], axis=1).astype(x.dtype)

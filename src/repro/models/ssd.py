@@ -110,7 +110,6 @@ def ssd_step(x: jax.Array, dtA: jax.Array, dt: jax.Array, B: jax.Array,
 
 def _split_proj(z: jax.Array, cfg: SSMConfig, d_model: int):
     di = cfg.d_inner(d_model)
-    h = cfg.n_heads(d_model)
     n = cfg.d_state
     zg, xin, Bc, Cc, dt = jnp.split(z, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
     return zg, xin, Bc, Cc, dt  # dt: (..., h)
@@ -153,7 +152,6 @@ def ssd_block_step(params: dict, x: jax.Array, cfg: SSMConfig, d_model: int,
     z = x @ params["in_proj"]
     zg, xin, Bc, Cc, dt = _split_proj(z, cfg, d_model)
     conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)       # (B, di+2n)
-    K = params["conv_w"].shape[0]
     xc = jnp.concatenate([state["conv"], conv_in[:, None]], axis=1)  # (B,K,·)
     conv_out = jnp.sum(xc.astype(jnp.float32)
                        * params["conv_w"].astype(jnp.float32)[None], axis=1)

@@ -2,10 +2,18 @@
 
 Iteration-level scheduling (Orca [72]): between decode iterations,
 finished requests leave the batch and waiting requests are prefilled into
-their slots.  The decode iteration itself runs either through the
-monolithic ``models.decode_step`` or through a
-``core.disagg.DisaggregatedInstance`` (the paper's runtime) — the engine
-is agnostic.
+their slots.  The decode iteration itself runs in one of two modes:
+
+  * ``monolithic`` — one batched ``models.decode_step`` (or any
+    ``decode_fn``) over all KV slots per iteration;
+  * ``pingpong`` — the paper's runtime: KV slots are partitioned into m
+    contiguous micro-batch groups and each iteration is executed by a
+    ``core.disagg.DisaggregatedInstance`` through the ping-pong schedule
+    (attention and expert stages double-buffered across disjoint device
+    groups).  Slot recycling stays at micro-batch granularity: each group
+    sheds finished requests and prefills waiting ones into its freed
+    slots between iterations, while other groups' device work is still in
+    flight (JAX async dispatch) — admission never stalls the pipeline.
 
 Prefill and decode are intentionally separate phases (the paper
 decouples them across clusters; here they simply never share a batch).
@@ -22,7 +30,8 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.models import decode_step, init_cache, prefill
 from repro.models.stubs import extra_inputs
-from repro.serving.kvcache import SlotAllocator, insert_rows
+from repro.serving.kvcache import (MicrobatchSlotAllocator, SlotAllocator,
+                                   insert_rows, mb_slot_ranges)
 from repro.serving.sampler import SamplingParams, sample
 
 
@@ -54,14 +63,42 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params: dict, *, max_batch: int = 8,
                  max_seq: int = 256, dtype=jnp.float32,
                  sampling: SamplingParams = SamplingParams(),
-                 decode_fn: Optional[Callable] = None, seed: int = 0):
+                 decode_fn: Optional[Callable] = None,
+                 mode: str = "monolithic", runtime=None,
+                 n_microbatches: Optional[int] = None, seed: int = 0):
+        """mode "monolithic": decode via ``decode_fn`` (default: batched
+        ``models.decode_step``; pass ``runtime.decode_step`` for the
+        disaggregated path without engine-level micro-batching).
+
+        mode "pingpong": decode via ``runtime`` (a
+        ``core.disagg.DisaggregatedInstance``) with the engine's KV slots
+        split into ``n_microbatches`` groups (default: the runtime plan's
+        m, clamped to ``max_batch``) shuttled through the ping-pong
+        schedule."""
+        if mode not in ("monolithic", "pingpong"):
+            raise ValueError(f"unknown engine mode {mode!r}")
+        if mode == "pingpong":
+            if runtime is None:
+                raise ValueError("pingpong mode needs a DisaggregatedInstance"
+                                 " runtime")
+            if decode_fn is not None:
+                raise ValueError("pingpong mode drives the runtime directly;"
+                                 " decode_fn is not used")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.sampling = sampling
+        self.mode = mode
+        self.runtime = runtime
         self.cache = init_cache(cfg, max_batch, max_seq, dtype)
-        self.slots = SlotAllocator(max_batch)
+        if mode == "pingpong":
+            m = n_microbatches or runtime.plan.n_microbatches
+            self.mb_slices = mb_slot_ranges(max_batch, m)
+            self.slots = MicrobatchSlotAllocator(max_batch, self.mb_slices)
+        else:
+            self.mb_slices = None
+            self.slots = SlotAllocator(max_batch)
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}
         self.finished: List[Request] = []
@@ -109,6 +146,10 @@ class Engine:
     def step(self) -> int:
         """One engine iteration: admit + one decode step.  Returns number
         of active requests decoded."""
+        # in pingpong mode, micro-batch-granular recycling lives in the
+        # allocator: released slots return to their own group's free list
+        # and admission refills the emptiest group — host-side work that
+        # overlaps whatever device work is still in flight
         self._retire()
         self._admit()
         if not self.running:
@@ -117,7 +158,11 @@ class Engine:
         pos = jnp.zeros((self.max_batch,), jnp.int32)
         for req in self.running.values():
             pos = pos.at[req.slot].set(req.position - 1)
-        logits, self.cache = self._decode(toks, self.cache, pos)
+        if self.mode == "pingpong":
+            logits, self.cache = self.runtime.decode_microbatched(
+                toks, self.cache, pos, self.mb_slices)
+        else:
+            logits, self.cache = self._decode(toks, self.cache, pos)
         self.key, k = jax.random.split(self.key)
         nxt = sample(logits, k, self.sampling)
         for req in self.running.values():
@@ -139,10 +184,15 @@ class Engine:
     def stats(self) -> dict:
         lat = [r.t_done - r.t_submit for r in self.finished]
         toks = sum(len(r.generated) for r in self.finished)
-        return {
+        out = {
             "finished": len(self.finished),
             "tokens": toks,
             "decode_iters": self.n_decode_iters,
             "prefills": self.n_prefills,
             "mean_latency_s": sum(lat) / len(lat) if lat else 0.0,
+            "mode": self.mode,
         }
+        if self.mode == "pingpong":
+            out["n_microbatches"] = len(self.mb_slices)
+            out["stages"] = self.runtime.stage_report()
+        return out

@@ -8,14 +8,13 @@ baselines in the paper employ and MegaScale-Infer inherits).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.models.transformer import init_cache
+from repro.core.pingpong import even_partition
 
 
 def insert_rows(global_cache, request_cache, row: int):
@@ -80,6 +79,9 @@ class SlotAllocator:
         self.used: Dict[int, int] = {}  # request id -> slot
 
     def alloc(self, rid: int) -> Optional[int]:
+        if rid in self.used:
+            raise ValueError(f"request {rid} already holds slot "
+                             f"{self.used[rid]}")
         if not self.free:
             return None
         slot = self.free.pop(0)
@@ -89,4 +91,73 @@ class SlotAllocator:
     def release(self, rid: int) -> int:
         slot = self.used.pop(rid)
         self.free.append(slot)
+        return slot
+
+
+def mb_slot_ranges(n_slots: int, m: int) -> List[slice]:
+    """Partition ``n_slots`` KV rows into <= m contiguous micro-batch
+    groups of near-even size (``pingpong.even_partition``).
+
+    Contiguity is what makes the ping-pong engine's per-micro-batch cache
+    views plain array slices — no gather when shuttling a micro-batch to
+    the expert group."""
+    return even_partition(n_slots, m)
+
+
+class MicrobatchSlotAllocator:
+    """Slot allocator aware of micro-batch groups (ping-pong serving).
+
+    Each KV slot belongs to exactly one micro-batch group (a contiguous
+    row range from ``mb_slot_ranges``).  Requests are admitted into a
+    specific group — or, by default, the group with the most free slots,
+    which keeps micro-batch loads balanced as requests of different
+    lengths churn (Orca-style recycling at micro-batch granularity).
+
+    Invariant (checked, not assumed): a slot is held by at most one
+    request at a time, and is only ever returned to its own group.
+    """
+
+    def __init__(self, n_slots: int, groups: List[slice]):
+        if groups[0].start != 0 or groups[-1].stop != n_slots or any(
+                a.stop != b.start for a, b in zip(groups, groups[1:])):
+            raise ValueError(f"groups {groups} must tile [0, {n_slots})")
+        self.groups = list(groups)
+        self.free_by_group: List[List[int]] = [
+            list(range(s.start, s.stop)) for s in groups]
+        self.used: Dict[int, int] = {}      # request id -> slot
+        self._held = set()                  # slots currently assigned
+
+    @property
+    def free(self) -> List[int]:
+        return [s for g in self.free_by_group for s in g]
+
+    def group_of(self, slot: int) -> int:
+        for gi, s in enumerate(self.groups):
+            if s.start <= slot < s.stop:
+                return gi
+        raise ValueError(f"slot {slot} outside all groups")
+
+    def alloc(self, rid: int, group: Optional[int] = None) -> Optional[int]:
+        if rid in self.used:
+            raise ValueError(f"request {rid} already holds slot "
+                             f"{self.used[rid]}")
+        if group is None:
+            candidates = [gi for gi, f in enumerate(self.free_by_group) if f]
+            if not candidates:
+                return None
+            group = max(candidates, key=lambda gi: len(self.free_by_group[gi]))
+        if not self.free_by_group[group]:
+            return None
+        slot = self.free_by_group[group].pop(0)
+        if slot in self._held:
+            raise RuntimeError(f"KV slot {slot} double-assigned "
+                               f"(rid={rid}, holder={self.used})")
+        self._held.add(slot)
+        self.used[rid] = slot
+        return slot
+
+    def release(self, rid: int) -> int:
+        slot = self.used.pop(rid)
+        self._held.discard(slot)
+        self.free_by_group[self.group_of(slot)].append(slot)
         return slot

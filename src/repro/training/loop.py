@@ -7,7 +7,6 @@ vocabularies this is the difference between fitting in HBM and not
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass
 from typing import Callable, Optional

@@ -1,0 +1,90 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The CI test job installs the real ``hypothesis`` (see pyproject
+``[dev]``); minimal environments (the CPU smoke image) may lack it.  The
+property tests still carry value as seeded random-sampling tests, so
+instead of skipping whole modules we provide just enough of the
+hypothesis API surface used by this repo:
+
+  * ``strategies.floats/integers/lists/sampled_from``
+  * ``@given(...)`` — draws ``max_examples`` samples from a PRNG seeded
+    with the test's qualified name (fully deterministic run to run)
+  * ``@settings(max_examples=..., deadline=...)`` — honoured for
+    ``max_examples`` (capped by REPRO_FALLBACK_EXAMPLES, default 12, to
+    keep the CPU tier-1 wall-clock sane); ``deadline`` is ignored
+
+No shrinking, no example database, no edge-case bias — the real
+hypothesis in CI provides those.  Import pattern used by test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypo_fallback import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import os
+import random
+from types import SimpleNamespace
+
+_EXAMPLE_CAP = int(os.environ.get("REPRO_FALLBACK_EXAMPLES", "12"))
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _lists(elements: _Strategy, min_size: int = 0,
+           max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def _sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+strategies = SimpleNamespace(floats=_floats, integers=_integers,
+                             lists=_lists, sampled_from=_sampled_from)
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    """Record requested example count on the test function."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Run the test with ``max_examples`` deterministic random draws."""
+    def deco(fn):
+        n = min(getattr(fn, "_fallback_max_examples", 100), _EXAMPLE_CAP)
+
+        def wrapper(*args):  # args is () or (self,)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                values = [s.draw(rng) for s in strats]
+                fn(*args, *values)
+        # metadata is copied by hand: functools.wraps would set
+        # __wrapped__, and pytest follows it to the original signature
+        # and then treats the sample parameters as fixtures
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        return wrapper
+    return deco

@@ -4,13 +4,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.config import MoEConfig, ModelConfig, get_config, reduced
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal image without dev deps: seeded-random fallback
+    from _hypo_fallback import given, settings, strategies as st
+
+from repro.config import MoEConfig, get_config, reduced
 from repro.core import load_balance, m2n, pingpong, planner
 from repro.core.disagg import DisaggPlan, DisaggregatedInstance
-from repro.models import decode_step, forward_train, init_params, prefill
+from repro.launch.mesh import make_mesh
+from repro.models import decode_step, init_params, prefill
 from repro.models import moe as moe_lib
 
 
@@ -132,8 +136,7 @@ class TestM2N:
     def test_sharded_matches_dense_single_device(self):
         """M2N shard_map dispatch == monolithic dispatch (1-device mesh)."""
         cfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32)
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
         key = jax.random.PRNGKey(0)
         d, T = 16, 24
         ks = jax.random.split(key, 5)

@@ -1,0 +1,206 @@
+"""Ping-pong micro-batched serving runtime tests.
+
+Covers the PR-1 tentpole: the runtime executes the exact schedule the
+``core.pingpong`` simulator models, micro-batch slot recycling never
+double-assigns a KV row, and the micro-batched engine is token-for-token
+identical to the monolithic path (m=1 and m>=2, with and without the
+shard_map M2N dispatch).
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.core import pingpong
+from repro.core.disagg import DisaggPlan, DisaggregatedInstance
+from repro.models import decode_step, init_params, prefill
+from repro.serving.engine import Engine, Request
+from repro.serving.kvcache import MicrobatchSlotAllocator, mb_slot_ranges
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = reduced(get_config("qwen2-moe-a2.7b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serve(cfg, params, prompts, max_new=6, **engine_kw):
+    eng = Engine(cfg, params, max_batch=4, max_seq=64, **engine_kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    done = {r.rid: r.generated for r in eng.run_until_done(max_iters=500)}
+    return done, eng
+
+
+def _prompts(cfg, n=6, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(2, cfg.vocab, size=rng.randint(2, 10)).tolist()
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------- schedule
+class TestScheduleTrace:
+    def test_schedule_matches_simulator_events(self):
+        for m, L in [(1, 4), (2, 3), (3, 8), (4, 1)]:
+            sim = pingpong.simulate_pingpong(1.0, 0.9, 0.3, m, L,
+                                             record_events=True)
+            assert pingpong.schedule_from_events(sim.events) == \
+                pingpong.build_schedule(m, L)
+
+    def test_runtime_trace_matches_schedule(self, moe_setup):
+        cfg, params = moe_setup
+        B, T = 4, 6
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+        _, cache = prefill(params, cfg, toks, max_seq=16)
+        nxt = jnp.zeros((B,), jnp.int32)
+        pos = jnp.full((B,), T, jnp.int32)
+        for m in (1, 2, 4):
+            inst = DisaggregatedInstance(cfg, params,
+                                         plan=DisaggPlan(n_microbatches=m))
+            inst.decode_step(nxt, cache, pos)
+            assert inst.last_trace == pingpong.build_schedule(m, cfg.n_layers)
+
+    def test_stage_report_counts(self, moe_setup):
+        cfg, params = moe_setup
+        B = 4
+        inst = DisaggregatedInstance(cfg, params,
+                                     plan=DisaggPlan(n_microbatches=2))
+        rep = inst.measure_stage_times(B)
+        # one op per (micro-batch, layer) on each side of the shuttle
+        assert rep["attn_n"] == rep["expert_n"] == 2 * cfg.n_layers
+        assert rep["m2n_n"] == rep["n2m_n"] == 2 * cfg.n_layers
+        assert rep["t_a"] > 0 and rep["t_e"] > 0 and rep["t_c"] >= 0
+
+    def test_auto_microbatches_feasible(self, moe_setup):
+        cfg, params = moe_setup
+        inst = DisaggregatedInstance(cfg, params,
+                                     plan=DisaggPlan(n_microbatches=2))
+        m = inst.auto_microbatches(4, max_m=4)
+        assert 1 <= m <= 4
+        # paper bound: m >= 2 (1 + T_c/T_f) before clamping
+        rep = inst.measure_stage_times(4)
+        unclamped = pingpong.min_microbatches(rep["t_c"],
+                                              max(rep["t_a"], rep["t_e"]))
+        assert m == min(4, max(1, unclamped))
+
+
+# ------------------------------------------------------------- allocation
+class TestMicrobatchSlots:
+    def test_ranges_tile_contiguously(self):
+        for n, m in [(8, 3), (4, 4), (5, 2), (7, 1), (3, 9)]:
+            groups = mb_slot_ranges(n, m)
+            assert groups[0].start == 0 and groups[-1].stop == n
+            assert all(a.stop == b.start for a, b in zip(groups, groups[1:]))
+            sizes = [s.stop - s.start for s in groups]
+            assert max(sizes) - min(sizes) <= 1
+
+    def test_never_double_assigns_under_churn(self):
+        rng = random.Random(0)
+        alloc = MicrobatchSlotAllocator(8, mb_slot_ranges(8, 3))
+        live = {}
+        next_rid = 0
+        for _ in range(500):
+            if live and rng.random() < 0.45:
+                rid = rng.choice(list(live))
+                slot = alloc.release(rid)
+                assert slot == live.pop(rid)
+            else:
+                slot = alloc.alloc(next_rid)
+                if slot is None:
+                    assert len(live) == 8  # only full allocators refuse
+                    continue
+                assert slot not in live.values(), "KV slot double-assigned"
+                live[next_rid] = slot
+                next_rid += 1
+            held = sorted(live.values())
+            assert sorted(alloc.used.values()) == held
+            assert sorted(alloc.free + held) == list(range(8))
+
+    def test_release_returns_slot_to_its_group(self):
+        groups = mb_slot_ranges(6, 2)
+        alloc = MicrobatchSlotAllocator(6, groups)
+        s = alloc.alloc(0, group=1)
+        assert groups[1].start <= s < groups[1].stop
+        alloc.release(0)
+        assert s in alloc.free_by_group[1]
+        assert s not in alloc.free_by_group[0]
+
+    def test_double_alloc_same_rid_raises(self):
+        alloc = MicrobatchSlotAllocator(4, mb_slot_ranges(4, 2))
+        alloc.alloc(7)
+        with pytest.raises(ValueError):
+            alloc.alloc(7)
+
+
+# ------------------------------------------------------------------ engine
+class TestPingPongEngine:
+    def test_m1_matches_monolithic_tokens(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg)
+        mono, _ = _serve(cfg, params, prompts)
+        inst = DisaggregatedInstance(cfg, params,
+                                     plan=DisaggPlan(n_microbatches=1))
+        pp, eng = _serve(cfg, params, prompts, mode="pingpong", runtime=inst)
+        assert pp == mono
+        assert eng.stats()["n_microbatches"] == 1
+
+    def test_m2_matches_monolithic_tokens(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, seed=3)
+        mono, _ = _serve(cfg, params, prompts)
+        inst = DisaggregatedInstance(cfg, params,
+                                     plan=DisaggPlan(n_microbatches=2))
+        pp, eng = _serve(cfg, params, prompts, mode="pingpong", runtime=inst)
+        assert pp == mono
+        stats = eng.stats()
+        assert stats["stages"]["attn_n"] > 0  # per-stage timings reported
+        # 4 slots in 2 groups, 6 requests: recycling crossed micro-batches
+        assert stats["prefills"] == 6
+
+    def test_m2n_dispatch_matches_monolithic(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, seed=5)
+        mono, _ = _serve(cfg, params, prompts)
+        inst = DisaggregatedInstance(
+            cfg, params, plan=DisaggPlan(n_microbatches=2, use_m2n=True))
+        pp, _ = _serve(cfg, params, prompts, mode="pingpong", runtime=inst)
+        assert pp == mono
+
+    def test_engine_slices_respected(self, moe_setup):
+        """decode_microbatched must honour engine-pinned slot groups."""
+        cfg, params = moe_setup
+        B, T = 4, 5
+        toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, cfg.vocab)
+        last, cache = prefill(params, cfg, toks, max_seq=16)
+        nxt = jnp.argmax(last, -1)
+        pos = jnp.full((B,), T, jnp.int32)
+        want, _ = decode_step(params, cfg, nxt, cache, pos)
+        inst = DisaggregatedInstance(cfg, params,
+                                     plan=DisaggPlan(n_microbatches=2))
+        got, _ = inst.decode_microbatched(nxt, cache, pos,
+                                          mb_slot_ranges(B, 3))
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=2e-4, atol=2e-4)
+        assert inst.last_trace == pingpong.build_schedule(3, cfg.n_layers)
+
+    def test_bad_slices_rejected(self, moe_setup):
+        cfg, params = moe_setup
+        inst = DisaggregatedInstance(cfg, params,
+                                     plan=DisaggPlan(n_microbatches=2))
+        toks = jnp.zeros((4,), jnp.int32)
+        pos = jnp.zeros((4,), jnp.int32)
+        from repro.models import init_cache
+        cache = init_cache(cfg, 4, 16, jnp.float32)
+        with pytest.raises(ValueError):
+            inst.decode_microbatched(toks, cache, pos,
+                                     [slice(0, 2), slice(3, 4)])
+
+    def test_pingpong_requires_runtime(self, moe_setup):
+        cfg, params = moe_setup
+        with pytest.raises(ValueError):
+            Engine(cfg, params, mode="pingpong")

@@ -3,12 +3,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal image without dev deps: seeded-random fallback
+    from _hypo_fallback import given, settings, strategies as st
 
 from repro.config import MoEConfig
 from repro.models import moe as moe_lib
 from repro.models.attention import attention, decode_attention
-from repro.models.common import apply_rope, causal_mask_bias, rms_norm
+from repro.models.common import apply_rope, rms_norm
 from repro.models.rglru import linear_recurrence
 from repro.models.ssd import segsum, ssd_chunked
 

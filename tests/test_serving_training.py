@@ -12,8 +12,8 @@ from repro.serving.engine import Engine, Request
 from repro.serving.sampler import SamplingParams, sample
 from repro.training.checkpoint import restore, save
 from repro.training.data import DataConfig, SyntheticLM
-from repro.training.loop import chunked_xent, lm_loss, train
-from repro.training.optimizer import (AdamWConfig, adamw_update, cosine_lr,
+from repro.training.loop import chunked_xent, train
+from repro.training.optimizer import (AdamWConfig, cosine_lr,
                                       init_opt_state)
 
 

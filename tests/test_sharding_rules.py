@@ -9,7 +9,6 @@ from jax.sharding import PartitionSpec as P
 from repro.config import INPUT_SHAPES, get_config
 from repro.configs import ASSIGNED, PAPER
 from repro.launch import sharding as shlib
-from repro.launch.mesh import make_mesh
 from repro.models.stubs import cache_specs as cache_structs
 from repro.models.transformer import init_params
 
