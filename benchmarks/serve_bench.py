@@ -1,21 +1,29 @@
 """End-to-end serving benchmark on CPU at reduced scale: monolithic vs
-disaggregated vs ping-pong micro-batched serving, batched continuous
-requests.
+disaggregated vs ping-pong micro-batched serving (inline and
+cluster-disaggregated prefill), batched continuous requests.
 
 On one CPU device the disaggregated runtime cannot show wall-clock
 overlap (no parallel hardware) — this benchmark validates correctness of
 the full serving path and reports all throughputs plus the ping-pong
-runtime's per-stage timing decomposition; the *modeled* gain is in
-fig8/fig12.
+runtime's per-stage timing decomposition and the prefill/transfer/decode
+phase breakdown; the *modeled* gain is in fig8/fig12.
 
-``python -m benchmarks.serve_bench --out BENCH_serve.json`` additionally
-writes the machine-readable baseline used to track the serving perf
-trajectory across PRs.
+``python -m benchmarks.serve_bench --out BENCH_serve.json
+--baseline-collects 3`` writes the machine-readable baseline used to
+track the serving perf trajectory across PRs (three independent
+collects merged into per-key minima, so gate floors reflect the
+machine's slow windows).  ``--check BENCH_serve.json`` is the CI
+perf-regression gate: it exits non-zero when ping-pong-vs-monolithic
+speedup or tok/s drops more than ``--tolerance`` (default 15%) below
+the committed baseline, after re-measuring flagged configs to rule out
+transient noise.  Absolute tok/s is machine-dependent — the committed
+baseline must be regenerated on the CI runner class it gates.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 from benchmarks.common import emit
 from repro.launch.serve import run as serve_run
@@ -25,22 +33,53 @@ CONFIGS = (
     ("disagg", {}),
     ("pingpong", {}),
     ("pingpong_m2n", {"use_m2n": True}),
+    # the PR-2 tentpole: prefill on its own cluster, KV rows migrated
+    # into the decode cache at admission (async transfer)
+    ("pingpong_disagg_prefill", {"prefill_devices": 1, "transfer": "async"}),
 )
 
+PHASE_KEYS = ("prefill_s", "transfer_s", "decode_s", "prefills",
+              "transfer_n", "transfer_mode", "prefill_batches")
+# gate tolerances are relative drops vs the committed baseline
+CHECKED_KEYS = ("decode_tok_per_s", "vs_monolithic")
 
-def collect() -> dict:
-    results = {}
-    for name, extra in CONFIGS:
-        runtime = "pingpong" if name.startswith("pingpong") else name
-        stats = serve_run("mixtral-8x22b", use_reduced=True, runtime=runtime,
-                          n_requests=6, max_new=4, max_batch=4, max_seq=64,
-                          microbatches=2, verbose=False, **extra)
-        entry = {k: stats[k] for k in ("tokens", "decode_iters", "wall_s",
-                                       "decode_tok_per_s", "finished")}
-        if "stages" in stats:
-            entry["stages"] = {k: v for k, v in stats["stages"].items()
-                               if k in ("t_a", "t_e", "t_c")}
-        results[name] = entry
+
+WORKLOAD = dict(use_reduced=True, n_requests=6, max_new=4, max_batch=4,
+                max_seq=64, microbatches=2, prompt_len=8,
+                warmup_requests=2, verbose=False)
+
+
+def _serve_once(name: str, extra: dict) -> dict:
+    runtime = "pingpong" if name.startswith("pingpong") else name
+    return serve_run("mixtral-8x22b", runtime=runtime, **WORKLOAD, **extra)
+
+
+def _entry(best: dict, runs: list) -> dict:
+    entry = {k: best[k] for k in ("tokens", "decode_iters", "wall_s",
+                                  "decode_tok_per_s", "finished")}
+    entry["tok_per_s_runs"] = runs
+    entry["phases"] = {k: best["phases"][k] for k in PHASE_KEYS
+                       if k in best["phases"]}
+    if "stages" in best:
+        entry["stages"] = {k: v for k, v in best["stages"].items()
+                           if k in ("t_a", "t_e", "t_c")}
+    return entry
+
+
+def _measure(name: str, extra: dict, repeats: int) -> dict:
+    """Serve one config ``repeats`` times, return the best run (highest
+    tok/s)."""
+    best, runs = None, []
+    for _ in range(max(1, repeats)):
+        stats = _serve_once(name, extra)
+        runs.append(stats["decode_tok_per_s"])
+        if best is None or stats["decode_tok_per_s"] > \
+                best["decode_tok_per_s"]:
+            best = stats
+    return _entry(best, runs)
+
+
+def _add_speedups(results: dict) -> dict:
     mono = results["monolithic"]["decode_tok_per_s"]
     for name in results:
         results[name]["vs_monolithic"] = (
@@ -48,8 +87,107 @@ def collect() -> dict:
     return results
 
 
+def collect(repeats: int = 3) -> dict:
+    """Best-of-``repeats`` per config, measured ROUND-ROBIN (all configs
+    once, then all again, ...), keeping each config's fastest run.
+
+    The workload is deterministic (greedy, fixed seed, pinned prompt
+    length — one prefill shape to compile), so best-of-N measures
+    steady-state speed: the first round absorbs compile time and
+    discarded rounds absorb co-tenant/thermal noise — single-run
+    variance on shared CPU runners exceeds the gate's 15% tolerance.
+    Round-robin matters for the speedup ratios: every config samples the
+    same machine-speed windows, so a slow spell hits numerator and
+    denominator alike instead of distorting ``vs_monolithic``."""
+    best = {name: None for name, _ in CONFIGS}
+    runs = {name: [] for name, _ in CONFIGS}
+    for _ in range(max(1, repeats)):
+        for name, extra in CONFIGS:
+            stats = _serve_once(name, extra)
+            runs[name].append(stats["decode_tok_per_s"])
+            if best[name] is None or stats["decode_tok_per_s"] > \
+                    best[name]["decode_tok_per_s"]:
+                best[name] = stats
+    return _add_speedups(
+        {name: _entry(best[name], runs[name]) for name, _ in CONFIGS})
+
+
+def combine_baselines(collects: list) -> dict:
+    """Merge several independent ``collect()`` results into one
+    conservative baseline: each gated key records the *minimum* across
+    collects (the machine's slow windows), so gate floors tolerate
+    machine-speed swings while a real regression — below even the worst
+    historical window minus tolerance — still fails.  Descriptive fields
+    come from the last collect."""
+    out = {}
+    for name in collects[-1]:
+        entries = [c[name] for c in collects]
+        e = dict(entries[-1])
+        for key in CHECKED_KEYS:
+            e[key] = min(x[key] for x in entries)
+        e["tok_per_s_runs"] = [r for x in entries
+                               for r in x["tok_per_s_runs"]]
+        out[name] = e
+    return out
+
+
+def check(fresh: dict, baseline: dict, tolerance: float = 0.15) -> list:
+    """Compare a fresh ``collect()`` result against the committed
+    baseline payload.  Returns ``(config_name, message)`` regression
+    tuples (empty = gate passes).  New configs absent from the baseline
+    pass by construction; configs *removed* from the fresh run fail."""
+    failures = []
+    for name, base in baseline["results"].items():
+        got = fresh.get(name)
+        if got is None:
+            failures.append((name, f"{name}: present in baseline, missing "
+                                   f"from fresh run"))
+            continue
+        for key in CHECKED_KEYS:
+            if name == "monolithic" and key == "vs_monolithic":
+                continue  # identically 1.0
+            floor = base[key] * (1.0 - tolerance)
+            if got[key] < floor:
+                failures.append(
+                    (name, f"{name}.{key}: {got[key]:.3f} < {floor:.3f} "
+                           f"(baseline {base[key]:.3f} - {tolerance:.0%})"))
+    return failures
+
+
+def check_with_retries(results: dict, baseline: dict, tolerance: float,
+                       repeats: int, max_retries: int = 3) -> list:
+    """Gate with noise confirmation: configs flagged by ``check`` are
+    re-measured (keeping each config's best observation) before the
+    verdict — a transient co-tenant/thermal dip must survive
+    ``max_retries`` extra best-of-``repeats`` rounds to fail the gate,
+    while a real regression fails every round.  Re-measuring can also
+    *newly* flag a config (a monolithic retry raises every speedup
+    denominator), which the next round then re-measures — one reason
+    the retry budget is 3, not 1.  Mutates ``results`` with the
+    improved observations.  Returns the final failure list."""
+    by_name = dict(CONFIGS)
+    failures = check(results, baseline, tolerance)
+    for _ in range(max_retries):
+        flagged = {name for name, _ in failures if name in by_name}
+        if not flagged:
+            break
+        print(f"retrying flagged configs to rule out noise: "
+              f"{sorted(flagged)}", file=sys.stderr)
+        for name in sorted(flagged):
+            entry = _measure(name, by_name[name], repeats)
+            if entry["decode_tok_per_s"] > results[name]["decode_tok_per_s"]:
+                entry["tok_per_s_runs"] = (results[name]["tok_per_s_runs"]
+                                           + entry["tok_per_s_runs"])
+                results[name] = entry
+        _add_speedups(results)
+        failures = check(results, baseline, tolerance)
+    return failures
+
+
 def run():
-    results = collect()
+    # benchmarks.run smoke entry: single repeat (the --check gate is the
+    # statistically careful consumer)
+    results = collect(repeats=1)
     for name, r in results.items():
         emit(f"serve_{name}", 1e6 / max(r["decode_tok_per_s"], 1e-9),
              f"{r['tokens']} tokens, {r['decode_iters']} decode iters, "
@@ -61,24 +199,56 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None,
                     help="write results as JSON (e.g. BENCH_serve.json)")
+    ap.add_argument("--check", default=None, metavar="BASELINE_JSON",
+                    help="perf-regression gate: exit non-zero if speedup "
+                         "or tok/s dropped below the committed baseline")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed relative drop vs baseline (default 0.15)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="runs per config; best run is recorded/gated")
+    ap.add_argument("--baseline-collects", type=int, default=1,
+                    help="independent collect() passes merged into a "
+                         "conservative (per-key minimum) baseline — use "
+                         ">=3 when regenerating the committed "
+                         "BENCH_serve.json so gate floors reflect the "
+                         "machine's slow windows, not one snapshot")
     args = ap.parse_args()
-    results = collect()
+    n_collects = max(1, args.baseline_collects)
+    collects = [collect(repeats=args.repeats) for _ in range(n_collects)]
+    results = collects[0] if n_collects == 1 else combine_baselines(collects)
+    if n_collects > 1:
+        print(f"combined {n_collects} collects into conservative "
+              f"per-key-minimum baseline")
+    failures = []
+    if args.check:
+        with open(args.check) as f:
+            baseline = json.load(f)
+        failures = check_with_retries(results, baseline, args.tolerance,
+                                      args.repeats)
     for name, r in results.items():
         print(f"{name}: {r['decode_tok_per_s']:.1f} tok/s "
               f"({r['vs_monolithic']:.2f}x vs monolithic)")
     if args.out:
         payload = {
             "benchmark": "serve_bench",
-            "workload": {"arch": "mixtral-8x22b", "reduced": True,
-                         "n_requests": 6, "max_new": 4, "max_batch": 4,
-                         "max_seq": 64, "microbatches": 2,
-                         "device": "cpu"},
+            "workload": {"arch": "mixtral-8x22b", "device": "cpu",
+                         **{k: v for k, v in WORKLOAD.items()
+                            if k != "verbose"}},
             "results": results,
         }
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {args.out}")
+    if args.check:
+        if failures:
+            print(f"PERF REGRESSION vs {args.check}:", file=sys.stderr)
+            for _, line in failures:
+                print(f"  {line}", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"perf gate vs {args.check}: OK "
+              f"(tolerance {args.tolerance:.0%}, best of {args.repeats}+ "
+              f"runs per config)")
 
 
 if __name__ == "__main__":

@@ -51,6 +51,18 @@ def main():
                                      use_m2n=True))
     runs["ping-pong + M2N"] = serve("ping-pong + M2N", mode="pingpong",
                                     runtime=inst_m2n)
+    # paper §3 end to end: prefill on its own cluster, KV rows migrated
+    # into the decode cache at admission
+    from repro.launch.mesh import split_serving_devices
+    from repro.serving.prefill import PrefillWorker
+    prefill_devs, decode_devs = split_serving_devices(1)
+    inst_pd = DisaggregatedInstance(
+        cfg, params, devices=decode_devs,
+        plan=DisaggPlan(n_microbatches=args.microbatches))
+    runs["ping-pong + prefill cluster"] = serve(
+        "ping-pong + prefill cluster", mode="pingpong", runtime=inst_pd,
+        prefill_worker=PrefillWorker(cfg, params, prefill_devs, max_seq=128),
+        transfer="async", kv_sharding=inst_pd.kv_sharding)
 
     for label, toks in runs.items():
         agree = sum(mono[i] == toks[i] for i in mono)

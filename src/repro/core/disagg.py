@@ -22,6 +22,14 @@ blocking on expert(mb); with disjoint device groups both run
 concurrently.  Shared experts and arctic's dense residual are computed
 on the attention side (they are batch-dense — paper's placement).
 
+This runtime is the *decode cluster* only — it does not own prefill.
+Prompt processing lives on its own device group
+(``serving.prefill.PrefillWorker``) and completed requests' KV rows
+arrive via ``serving.kvcache.migrate_kv`` onto ``kv_sharding`` (the
+attention group owns the KV cache).  Pass ``devices=`` the decode
+cluster's device pool when some local devices are reserved for prefill
+(``launch.mesh.split_serving_devices``).
+
 Applicability (DESIGN.md §Arch-applicability): layer kinds attn/local
 with dense or MoE FFN.  SSM/RG-LRU/cross layers have no separable FFN
 stage here and are served by the monolithic engine instead.
@@ -98,7 +106,13 @@ class DisaggregatedInstance:
     def __init__(self, cfg: ModelConfig, params: dict,
                  attn_devices: Optional[Sequence] = None,
                  expert_devices: Optional[Sequence] = None,
-                 plan: Optional[DisaggPlan] = None):
+                 plan: Optional[DisaggPlan] = None,
+                 devices: Optional[Sequence] = None):
+        """``devices``: the decode cluster's device pool (default: all
+        local devices), split half attention / half expert unless
+        ``attn_devices``/``expert_devices`` pin the groups explicitly.
+        Serving launchers pass the pool left over after reserving the
+        prefill cluster."""
         # plans are mutated in place (auto-m, profile toggling), so each
         # instance must own its own default rather than share one
         plan = plan if plan is not None else DisaggPlan()
@@ -108,7 +122,7 @@ class DisaggregatedInstance:
                     f"disaggregated runtime does not support layer kind "
                     f"{kind!r} ({cfg.name}); use the monolithic engine "
                     f"(see DESIGN.md §Arch-applicability)")
-        devs = jax.devices()
+        devs = list(devices) if devices is not None else jax.devices()
         attn_devices = list(attn_devices or devs[: max(1, len(devs) // 2)])
         expert_devices = list(expert_devices or devs[max(1, len(devs) // 2):]
                               or devs[:1])
@@ -162,6 +176,13 @@ class DisaggregatedInstance:
         self.reset_stage_times()
         self.last_trace: List[tuple] = []
         self._build_jits()
+
+    @property
+    def kv_sharding(self) -> NamedSharding:
+        """Placement migrated KV rows should land on: the attention
+        group owns the KV cache (per-request rows, replicated here —
+        the dp sharding of a single row is degenerate)."""
+        return NamedSharding(self.attn_mesh, P())
 
     # ------------------------------------------------------------------ jits
     def _build_jits(self):

@@ -1,10 +1,14 @@
 """Serving launcher: run the continuous-batching engine over the
 monolithic decode path, the disaggregated (MegaScale-Infer) runtime, or
-the full ping-pong micro-batched pipeline.
+the full ping-pong micro-batched pipeline — optionally with prefill
+disaggregated onto its own device cluster (``--prefill-devices``) and
+explicit KV migration into the decode cache.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b \
       --reduced --runtime pingpong --requests 16 --microbatches auto
+  PYTHONPATH=src python -m repro.launch.serve --reduced \
+      --runtime pingpong --prefill-devices 1 --transfer async
 """
 from __future__ import annotations
 
@@ -16,8 +20,10 @@ import numpy as np
 
 from repro.config import get_config, reduced
 from repro.core.disagg import STAGES, DisaggPlan, DisaggregatedInstance
+from repro.launch.mesh import split_serving_devices
 from repro.models import init_params
 from repro.serving.engine import Engine, Request
+from repro.serving.prefill import PrefillWorker
 from repro.serving.sampler import SamplingParams
 
 RUNTIMES = ("monolithic", "disagg", "pingpong")
@@ -31,11 +37,28 @@ def _format_stages(report: dict) -> str:
             f"t_e={report['t_e'] * 1e6:.0f}us t_c={report['t_c'] * 1e6:.0f}us")
 
 
+def _format_phases(ph: dict) -> str:
+    return (f"phases: prefill={ph['prefill_s'] * 1e3:.1f}ms/"
+            f"{ph['prefills']} "
+            f"transfer[{ph['transfer_mode']}]={ph['transfer_s'] * 1e3:.1f}ms/"
+            f"{ph['transfer_n']} "
+            f"decode={ph['decode_s'] * 1e3:.1f}ms/{ph['decode_n']}")
+
+
 def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
         n_requests: int = 8, max_new: int = 8, max_batch: int = 4,
         max_seq: int = 128, microbatches: int | str = 3, use_m2n: bool = False,
-        profile_stages: bool = False, temperature: float = 0.0,
-        seed: int = 0, verbose: bool = True):
+        prefill_devices: int = 0, transfer: str = "async",
+        prefill_chunk_tokens: int = 512, profile_stages: bool = False,
+        temperature: float = 0.0, prompt_len: int = 0,
+        warmup_requests: int = 0, seed: int = 0, verbose: bool = True):
+    """``prompt_len`` > 0 pins every request's prompt length (one prefill
+    shape to compile — benchmarks use this to keep timing variance down);
+    0 draws lengths in [2, max_seq/4).  ``warmup_requests`` > 0 serves
+    that many throwaway requests through the engine first, so jit/eager
+    compiles (per fresh runtime instance — the m2n shard_map alone costs
+    seconds) never land in the measured wall time; reported tokens /
+    decode_iters / prefills and tok/s cover the measured batch only."""
     if runtime not in RUNTIMES:
         raise ValueError(f"runtime must be one of {RUNTIMES}, got {runtime!r}")
     cfg = get_config(arch)
@@ -43,13 +66,23 @@ def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
         cfg = reduced(cfg)
     params = init_params(cfg, jax.random.PRNGKey(seed))
 
+    # cluster topology: prefill group (optional) vs decode group; the
+    # decode group is further split attention/expert by the runtime
+    prefill_devs, decode_devs = split_serving_devices(prefill_devices)
+    if verbose and prefill_devs:
+        disjoint = not set(map(id, prefill_devs)) & set(map(id, decode_devs))
+        note = "disjoint" if disjoint else "overlapping, single-device fallback"
+        print(f"prefill cluster: {len(prefill_devs)} device(s), decode "
+              f"cluster: {len(decode_devs)} device(s) ({note})")
+
     engine_kw = {}
     inst = None
     if runtime in ("disagg", "pingpong"):
         m = 2 if microbatches == "auto" else int(microbatches)
         inst = DisaggregatedInstance(
-            cfg, params, plan=DisaggPlan(n_microbatches=m, use_m2n=use_m2n,
-                                         profile_stages=profile_stages))
+            cfg, params, devices=decode_devs,
+            plan=DisaggPlan(n_microbatches=m, use_m2n=use_m2n,
+                            profile_stages=profile_stages))
         if microbatches == "auto":
             # measure T_a/T_e/T_c on a profiled decode iteration, then
             # apply the paper's m >= 2(1 + T_c/T_f) feasibility bound
@@ -62,25 +95,56 @@ def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
     elif runtime == "pingpong":
         engine_kw.update(mode="pingpong", runtime=inst)
 
+    if prefill_devs:
+        engine_kw.update(
+            prefill_worker=PrefillWorker(cfg, params, prefill_devs,
+                                         max_seq=max_seq,
+                                         chunk_tokens=prefill_chunk_tokens),
+            transfer=transfer,
+            kv_sharding=inst.kv_sharding if inst is not None else None)
+
     eng = Engine(cfg, params, max_batch=max_batch, max_seq=max_seq,
                  sampling=SamplingParams(temperature=temperature),
                  seed=seed, **engine_kw)
     rng = np.random.RandomState(seed)
+    if warmup_requests:
+        for i in range(warmup_requests):
+            plen = prompt_len or 8
+            prompt = rng.randint(2, cfg.vocab, size=plen).tolist()
+            eng.submit(Request(rid=-1 - i, prompt=prompt, max_new_tokens=2))
+        eng.run_until_done()
+    pre = eng.stats()
     for i in range(n_requests):
-        plen = int(rng.randint(2, max_seq // 4))
+        plen = prompt_len or int(rng.randint(2, max_seq // 4))
         prompt = rng.randint(2, cfg.vocab, size=plen).tolist()
         eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=max_new))
     t0 = time.perf_counter()
     eng.run_until_done()
     dt = time.perf_counter() - t0
     stats = eng.stats()
+    for k in ("tokens", "decode_iters", "prefills", "finished"):
+        stats[k] -= pre[k]
+    if warmup_requests:  # latency over measured requests only — warmup
+        lat = [r.t_done - r.t_submit  # latencies include compile time
+               for r in eng.finished if r.rid >= 0]
+        stats["mean_latency_s"] = sum(lat) / len(lat) if lat else 0.0
+    # phase breakdown must cover the measured batch only, or warmup
+    # compile time dominates the attribution (cumulative keys only —
+    # transfer_mode/prefill_devices are not counters)
+    for k in ("prefill_s", "prefills", "prefill_batches", "prefill_tokens",
+              "transfer_s", "transfer_n", "decode_s", "decode_n"):
+        if k in stats["phases"]:
+            stats["phases"][k] -= pre["phases"].get(k, 0)
     stats["wall_s"] = dt
     stats["decode_tok_per_s"] = stats["tokens"] / dt
     if verbose:
-        print(f"{arch} [{runtime}] served {stats['finished']} requests, "
+        print(f"{arch} [{runtime}"
+              f"{'+disagg-prefill' if prefill_devs else ''}] served "
+              f"{stats['finished']} requests, "
               f"{stats['tokens']} tokens in {dt:.2f}s "
               f"({stats['decode_tok_per_s']:.1f} tok/s, "
               f"{stats['decode_iters']} decode iters)")
+        print(_format_phases(stats["phases"]))
         if "stages" in stats:
             print(_format_stages(stats["stages"]))
     return stats
@@ -88,7 +152,11 @@ def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="model config name (default mixtral-8x22b; the "
+                         "default is only accepted together with "
+                         "--reduced — full-scale params don't fit a "
+                         "local host)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--runtime", default="monolithic", choices=RUNTIMES)
     ap.add_argument("--requests", type=int, default=8)
@@ -101,17 +169,34 @@ def main():
     ap.add_argument("--use-m2n", action="store_true",
                     help="route MoE layers through the shard_map M2N "
                          "dispatch (core.m2n) on the expert mesh")
+    ap.add_argument("--prefill-devices", type=int, default=0,
+                    help="reserve N devices as a dedicated prefill "
+                         "cluster (0 = inline prefill on the decode "
+                         "cluster); KV rows are migrated into the decode "
+                         "cache at admission")
+    ap.add_argument("--transfer", default="async", choices=("sync", "async"),
+                    help="KV migration mode: async overlaps the copy "
+                         "with in-flight decode, sync blocks per row")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=512,
+                    help="token budget per batched prefill call on the "
+                         "prefill cluster")
     ap.add_argument("--profile-stages", action="store_true",
                     help="block per stage for device-accurate timings "
                          "(serialises the pipeline)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
+    if args.arch is None and not args.reduced:
+        ap.error("pass --arch, or --reduced to serve the default "
+                 "mixtral-8x22b at reduced scale")
     mb = args.microbatches if args.microbatches == "auto" \
         else int(args.microbatches)
-    run(args.arch, use_reduced=args.reduced, runtime=args.runtime,
+    run(args.arch or "mixtral-8x22b", use_reduced=args.reduced,
+        runtime=args.runtime,
         n_requests=args.requests, max_new=args.max_new,
         max_batch=args.max_batch, max_seq=args.max_seq,
         microbatches=mb, use_m2n=args.use_m2n,
+        prefill_devices=args.prefill_devices, transfer=args.transfer,
+        prefill_chunk_tokens=args.prefill_chunk_tokens,
         profile_stages=args.profile_stages, temperature=args.temperature)
 
 

@@ -15,8 +15,16 @@ their slots.  The decode iteration itself runs in one of two modes:
     slots between iterations, while other groups' device work is still in
     flight (JAX async dispatch) — admission never stalls the pipeline.
 
-Prefill and decode are intentionally separate phases (the paper
-decouples them across clusters; here they simply never share a batch).
+Prefill and decode are separate phases, and — the paper's §3 split —
+optionally separate *clusters*: with a ``prefill_worker``
+(``serving.prefill.PrefillWorker``) waiting requests are prefilled on
+the prefill device group and ``_admit()`` consumes completed
+``(first_token, request_kv)`` handles from the worker's transfer queue,
+migrating each request's KV rows onto the decode placement
+(``kvcache.migrate_kv``) instead of running ``models.prefill`` inline on
+the decode cluster's devices.  Admission order equals submission order
+in both paths, so under greedy sampling the disaggregated engine is
+token-for-token identical to the inline-prefill engine.
 """
 from __future__ import annotations
 
@@ -31,7 +39,8 @@ from repro.config import ModelConfig
 from repro.models import decode_step, init_cache, prefill
 from repro.models.stubs import extra_inputs
 from repro.serving.kvcache import (MicrobatchSlotAllocator, SlotAllocator,
-                                   insert_rows, mb_slot_ranges)
+                                   insert_rows, mb_slot_ranges, migrate_kv,
+                                   reset_row)
 from repro.serving.sampler import SamplingParams, sample
 
 
@@ -65,7 +74,9 @@ class Engine:
                  sampling: SamplingParams = SamplingParams(),
                  decode_fn: Optional[Callable] = None,
                  mode: str = "monolithic", runtime=None,
-                 n_microbatches: Optional[int] = None, seed: int = 0):
+                 n_microbatches: Optional[int] = None,
+                 prefill_worker=None, transfer: str = "async",
+                 kv_sharding=None, seed: int = 0):
         """mode "monolithic": decode via ``decode_fn`` (default: batched
         ``models.decode_step``; pass ``runtime.decode_step`` for the
         disaggregated path without engine-level micro-batching).
@@ -74,9 +85,21 @@ class Engine:
         ``core.disagg.DisaggregatedInstance``) with the engine's KV slots
         split into ``n_microbatches`` groups (default: the runtime plan's
         m, clamped to ``max_batch``) shuttled through the ping-pong
-        schedule."""
+        schedule.
+
+        ``prefill_worker`` (a ``serving.prefill.PrefillWorker``) moves
+        prefill onto its own device cluster: admission consumes the
+        worker's transfer queue and ``migrate_kv`` reshards each
+        request's KV rows onto ``kv_sharding`` (default: wherever the
+        decode cache lives — pass the runtime's ``kv_sharding`` to pin
+        rows to the attention group).  ``transfer`` is "async" (the
+        copy overlaps in-flight decode via JAX async dispatch) or
+        "sync" (block on each migrated row before admission)."""
         if mode not in ("monolithic", "pingpong"):
             raise ValueError(f"unknown engine mode {mode!r}")
+        if transfer not in ("sync", "async"):
+            raise ValueError(f"transfer must be 'sync' or 'async', "
+                             f"got {transfer!r}")
         if mode == "pingpong":
             if runtime is None:
                 raise ValueError("pingpong mode needs a DisaggregatedInstance"
@@ -110,6 +133,14 @@ class Engine:
         self._last_token = [0] * max_batch
         self.n_decode_iters = 0
         self.n_prefills = 0
+        self.prefill_worker = prefill_worker
+        self.transfer = transfer
+        self.kv_sharding = kv_sharding
+        # per-phase host-issue wall time (prefill / KV transfer / decode)
+        self.t_prefill = 0.0
+        self.t_transfer = 0.0
+        self.t_decode = 0.0
+        self.n_transfers = 0
 
     # ------------------------------------------------------------- frontend
     def submit(self, req: Request):
@@ -117,29 +148,75 @@ class Engine:
         self.waiting.append(req)
 
     # ------------------------------------------------------------- schedule
+    def _start_request(self, req: Request, slot: int, last_logits):
+        """Shared admission bookkeeping: sample the first token (engine
+        PRNG stream — identical order in inline and disaggregated paths)
+        and mark the request running."""
+        req.slot = slot
+        self.key, k = jax.random.split(self.key)
+        tok = int(sample(last_logits, k, self.sampling)[0])
+        req.generated.append(tok)
+        req.t_first_token = time.perf_counter()
+        self._last_token[slot] = tok
+        self.running[req.rid] = req
+        self.n_prefills += 1
+
     def _admit(self):
+        if self.prefill_worker is not None:
+            self._admit_from_transfer_queue()
+            return
         while self.waiting and self.slots.free:
             req = self.waiting.pop(0)
             slot = self.slots.alloc(req.rid)
-            req.slot = slot
             toks = jnp.asarray([req.prompt], jnp.int32)
             extras = extra_inputs(self.cfg, 1)
+            t0 = time.perf_counter()
             last_logits, rcache = prefill(self.params, self.cfg, toks,
                                           max_seq=self.max_seq, **extras)
+            self.t_prefill += time.perf_counter() - t0
+            t0 = time.perf_counter()
             self.cache = insert_rows(self.cache, rcache, slot)
-            self.key, k = jax.random.split(self.key)
-            tok = int(sample(last_logits, k, self.sampling)[0])
-            req.generated.append(tok)
-            req.t_first_token = time.perf_counter()
-            self._last_token[slot] = tok
-            self.running[req.rid] = req
-            self.n_prefills += 1
+            self.t_transfer += time.perf_counter() - t0
+            self.n_transfers += 1
+            self._start_request(req, slot, last_logits)
+
+    def _admit_from_transfer_queue(self):
+        """Disaggregated prefill (paper §3): feed the prefill cluster the
+        whole waiting queue (queueing is free — no KV is materialized
+        until a batch is pumped), run prefill batches with bounded
+        work-ahead, then admit completed prefills from the transfer
+        queue into free KV slots, migrating each request's KV rows onto
+        the decode placement.  Work-ahead past slot availability is
+        sound (prefill results depend only on the prompt) but capped at
+        one extra batch-width of ready handles, so a request burst
+        cannot pile up unbounded per-request KV on the prefill cluster
+        (backpressure: more is pumped as slots free up each step)."""
+        w = self.prefill_worker
+        while self.waiting:
+            w.submit(self.waiting.pop(0))
+        lookahead = len(self.slots.free) + self.max_batch
+        while w.pending_count and w.ready_count < lookahead:
+            w.pump(max_batches=1)
+        while self.slots.free and w.ready_count:
+            res = w.pop()
+            req = res.request
+            slot = self.slots.alloc(req.rid)
+            t0 = time.perf_counter()
+            self.cache = migrate_kv(self.cache, res.kv, slot,
+                                    sharding=self.kv_sharding,
+                                    sync=self.transfer == "sync")
+            self.t_transfer += time.perf_counter() - t0
+            self.n_transfers += 1
+            self._start_request(req, slot, res.last_logits)
 
     def _retire(self):
         for rid in [r for r, q in self.running.items() if q.done]:
             req = self.running.pop(rid)
             req.t_done = time.perf_counter()
-            self.slots.release(rid)
+            slot = self.slots.release(rid)
+            # invalidate the freed KV row before any reuse: a recycled
+            # slot must never expose the previous request's cache state
+            self.cache = reset_row(self.cache, self.cfg, slot, self.max_seq)
             self.finished.append(req)
 
     # ----------------------------------------------------------------- step
@@ -158,11 +235,13 @@ class Engine:
         pos = jnp.zeros((self.max_batch,), jnp.int32)
         for req in self.running.values():
             pos = pos.at[req.slot].set(req.position - 1)
+        t0 = time.perf_counter()
         if self.mode == "pingpong":
             logits, self.cache = self.runtime.decode_microbatched(
                 toks, self.cache, pos, self.mb_slices)
         else:
             logits, self.cache = self._decode(toks, self.cache, pos)
+        self.t_decode += time.perf_counter() - t0
         self.key, k = jax.random.split(self.key)
         nxt = sample(logits, k, self.sampling)
         for req in self.running.values():
@@ -174,8 +253,16 @@ class Engine:
         self._retire()
         return n_active
 
+    @property
+    def outstanding(self) -> bool:
+        """Any request not yet finished — waiting, running, or still in
+        the prefill cluster's pending/transfer queues."""
+        w = self.prefill_worker
+        backlog = bool(w is not None and (w.pending_count or w.ready_count))
+        return bool(self.waiting or self.running or backlog)
+
     def run_until_done(self, max_iters: int = 10_000):
-        while (self.waiting or self.running) and max_iters:
+        while self.outstanding and max_iters:
             self.step()
             max_iters -= 1
         return self.finished
@@ -191,7 +278,21 @@ class Engine:
             "prefills": self.n_prefills,
             "mean_latency_s": sum(lat) / len(lat) if lat else 0.0,
             "mode": self.mode,
+            "disagg_prefill": self.prefill_worker is not None,
         }
+        # per-phase breakdown (host-issue wall time: the pipeline stays
+        # async — prefill/transfer overlap in-flight decode)
+        phases = {"transfer_s": self.t_transfer,
+                  "transfer_n": self.n_transfers,
+                  "transfer_mode": self.transfer,
+                  "decode_s": self.t_decode,
+                  "decode_n": self.n_decode_iters}
+        if self.prefill_worker is not None:
+            phases.update(self.prefill_worker.stats())
+        else:
+            phases.update(prefill_s=self.t_prefill,
+                          prefills=self.n_prefills)
+        out["phases"] = phases
         if self.mode == "pingpong":
             out["n_microbatches"] = len(self.mb_slices)
             out["stages"] = self.runtime.stage_report()

@@ -11,7 +11,6 @@ from __future__ import annotations
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.core.pingpong import even_partition
@@ -42,13 +41,44 @@ def insert_rows(global_cache, request_cache, row: int):
     }
 
 
-def reset_row(global_cache, cfg: ModelConfig, row: int, max_seq: int):
-    """Invalidate a row (request finished): mark kv positions empty."""
+def extract_row(global_cache, row: int):
+    """Slice one request's cache out of a batched cache (inverse of
+    ``insert_rows``): blocks leaves (n_blocks, B, ...) -> (n_blocks, 1, ...),
+    remainder leaves (B, ...) -> (1, ...)."""
+    return {
+        "blocks": tuple(jax.tree.map(lambda a: a[:, row:row + 1], e)
+                        for e in global_cache["blocks"]),
+        "remainder": tuple(jax.tree.map(lambda a: a[row:row + 1], e)
+                           for e in global_cache["remainder"]),
+    }
 
-    def rst(a):
-        if a.dtype == jnp.int32 and a.ndim >= 2:  # pos arrays
-            return a.at[..., row, :].set(-1) if a.ndim == 3 else a
-        return a
+
+def migrate_kv(decode_cache, request_cache, row: int, *, sharding=None,
+               sync: bool = False):
+    """The paper's prefill->decode KV-transfer hop: reshard one request's
+    prefill-side cache (batch dim 1) onto the decode placement and write
+    it into KV row ``row`` of the decode cache.
+
+    ``sharding``: target placement of the migrated rows — e.g. the
+    decode runtime's attention-mesh sharding (the attention group owns
+    the KV cache).  Defaults to wherever the decode cache already lives.
+    ``sync=True`` blocks until the transfer lands before the insert
+    (sync transfer mode); by default the copy is issued asynchronously
+    and overlaps whatever decode work is still in flight (JAX async
+    dispatch — the analogue of the paper's layer-wise KV streaming).
+    """
+    if sharding is None:
+        sharding = jax.tree.leaves(decode_cache)[0].sharding
+    moved = jax.device_put(request_cache, sharding)
+    if sync:
+        jax.block_until_ready(moved)
+    return insert_rows(decode_cache, moved, row)
+
+
+def reset_row(global_cache, cfg: ModelConfig, row: int, max_seq: int):
+    """Invalidate a row (request finished): mark kv positions empty and
+    zero recurrent state, so a recycled KV slot can never expose the
+    previous request's cache (the engine calls this on slot release)."""
 
     def rst_entry(entry):
         out = dict(entry)

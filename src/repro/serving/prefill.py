@@ -1,0 +1,170 @@
+"""Prefill cluster worker (paper §3: prefill/decode disaggregation).
+
+MegaScale-Infer decouples prefill from decoding so each phase gets its
+own parallelism and hardware; the decode cluster's ping-pong pipeline is
+sized for memory-bound single-token work and must never stall on a
+compute-bound prompt pass.  This module is the prefill side of that
+split:
+
+  * ``PrefillWorker`` owns a *prefill device group* (its own mesh,
+    disjoint from the decode cluster's attention/expert groups when
+    enough devices exist) with a replicated copy of the parameters.
+  * The engine feeds it waiting requests (``submit``), the worker runs
+    **chunked, batched prefill** (``pump``): consecutive same-length
+    prompts are batched into one ``models.prefill`` call, bounded by a
+    ``chunk_tokens`` budget so one giant prompt batch cannot monopolise
+    the prefill cluster (chunked-prefill-style TTFT isolation).
+  * Each completed request is emitted onto a **transfer queue** as a
+    ``PrefillResult`` handle — ``(first_token, request_kv)`` plus the
+    last-position logits — in strict submission (FIFO) order.  The KV
+    stays on the prefill cluster until the decode engine admits the
+    request and ``serving.kvcache.migrate_kv`` reshards the rows onto
+    the decode placement (the paper's KV-transfer hop).
+
+Because prefill results depend only on the prompt, the prefill cluster
+may run arbitrarily far ahead of decode-slot availability without
+changing any generated token: admission into KV slots — not prefill
+timing — determines decode batch composition, and under greedy sampling
+the emitted tokens are identical to the inline-prefill engine.
+
+Batching caveat: modality stubs (``models.stubs.extra_inputs``) generate
+batch-shaped randoms, so archs that need them (vlm/audio) are prefilled
+one request at a time to stay bit-identical with the inline path.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import prefill as model_prefill
+from repro.models.stubs import extra_inputs
+from repro.serving.kvcache import extract_row
+
+
+@dataclass
+class PrefillResult:
+    """A completed prefill: the transfer-queue handle the engine admits.
+
+    ``kv`` (a per-request cache pytree, batch dim 1) still lives on the
+    prefill cluster; ``migrate_kv`` moves it onto the decode placement
+    at admission time.  ``first_token`` is the greedy token as a 0-d
+    array — kept lazy so emitting a handle never blocks the host on the
+    prefill computation; the engine samples from ``last_logits`` with
+    its own PRNG stream at admission instead."""
+    request: object                   # serving.engine.Request
+    last_logits: jax.Array            # (1, V) last-position logits
+    first_token: jax.Array            # 0-d int32 (greedy argmax), lazy
+    kv: dict
+    n_prompt_tokens: int
+    t_prefill_s: float                # this request's share of batch time
+
+
+class PrefillWorker:
+    """Runs batched prefill on its own device group, emits a FIFO
+    transfer queue of ``PrefillResult`` handles."""
+
+    def __init__(self, cfg: ModelConfig, params: dict,
+                 devices: Optional[Sequence] = None, *, max_seq: int = 256,
+                 chunk_tokens: int = 512,
+                 prefill_fn: Optional[Callable] = None):
+        """``devices``: the prefill cluster (default: first local device).
+        ``chunk_tokens``: token budget per prefill batch — consecutive
+        same-length prompts are batched while batch*plen stays within it
+        (a single longer prompt always runs alone).  ``prefill_fn`` lets
+        tests / alternative backends replace ``models.prefill``; it must
+        match its ``(params, cfg, tokens, max_seq, **extras)`` signature.
+        """
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.chunk_tokens = max(1, chunk_tokens)
+        devs = list(devices) if devices else [jax.devices()[0]]
+        self.mesh = Mesh(np.array(devs), ("prefill",))
+        self.params = jax.device_put(params, NamedSharding(self.mesh, P()))
+        self._prefill = prefill_fn or model_prefill
+        self._needs_extras = bool(extra_inputs(cfg, 1))
+        self.pending: deque = deque()       # submitted, not yet prefilled
+        self.ready: deque = deque()         # the transfer queue (FIFO)
+        self.n_prefills = 0
+        self.n_batches = 0
+        self.n_tokens = 0
+        self.t_prefill_s = 0.0
+
+    # ------------------------------------------------------------- frontend
+    def submit(self, request) -> None:
+        self.pending.append(request)
+
+    @property
+    def ready_count(self) -> int:
+        return len(self.ready)
+
+    @property
+    def pending_count(self) -> int:
+        return len(self.pending)
+
+    def pop(self) -> Optional[PrefillResult]:
+        """Next completed prefill in submission order, or None."""
+        return self.ready.popleft() if self.ready else None
+
+    # ------------------------------------------------------------- prefill
+    def _next_batch(self) -> list:
+        """Pop the next chunk: consecutive same-length prompts within the
+        ``chunk_tokens`` budget (FIFO order is preserved by construction).
+        """
+        batch = [self.pending.popleft()]
+        plen = len(batch[0].prompt)
+        if self._needs_extras:
+            return batch
+        while (self.pending and len(self.pending[0].prompt) == plen
+               and (len(batch) + 1) * plen <= self.chunk_tokens):
+            batch.append(self.pending.popleft())
+        return batch
+
+    def _run_batch(self, batch: list) -> None:
+        t0 = time.perf_counter()
+        toks = jnp.asarray([r.prompt for r in batch], jnp.int32)
+        extras = extra_inputs(self.cfg, len(batch))
+        # pin capacity_mode to what the inline engine's per-request
+        # (B=1) prefill would resolve "auto" to — batching must not flip
+        # a request from drop-free "full" into bounded "eval" capacity
+        # (models.prefill's auto threshold is B*T <= 2048), or parity
+        # with the inline path breaks for large chunk_tokens
+        capacity = "full" if toks.shape[1] <= 2048 else "eval"
+        last_logits, cache = self._prefill(self.params, self.cfg, toks,
+                                           self.max_seq,
+                                           capacity_mode=capacity, **extras)
+        greedy = jnp.argmax(last_logits, -1)
+        dt = time.perf_counter() - t0
+        self.t_prefill_s += dt
+        self.n_batches += 1
+        for i, req in enumerate(batch):
+            self.ready.append(PrefillResult(
+                request=req, last_logits=last_logits[i:i + 1],
+                first_token=greedy[i], kv=extract_row(cache, i),
+                n_prompt_tokens=len(req.prompt),
+                t_prefill_s=dt / len(batch)))
+            self.n_prefills += 1
+            self.n_tokens += len(req.prompt)
+
+    def pump(self, max_batches: Optional[int] = None) -> int:
+        """Run up to ``max_batches`` prefill batches (default: drain the
+        pending queue).  Returns the number of batches executed."""
+        done = 0
+        while self.pending and (max_batches is None or done < max_batches):
+            self._run_batch(self._next_batch())
+            done += 1
+        return done
+
+    # -------------------------------------------------------------- metrics
+    def stats(self) -> dict:
+        return {"prefill_s": self.t_prefill_s, "prefills": self.n_prefills,
+                "prefill_batches": self.n_batches,
+                "prefill_tokens": self.n_tokens,
+                "prefill_devices": len(self.mesh.devices.flat)}

@@ -91,6 +91,55 @@ print("PINGPONG-8DEV-OK t_a=%.2e t_e=%.2e t_c=%.2e" %
     assert "PINGPONG-8DEV-OK" in out
 
 
+def test_prefill_cluster_8_devices_token_identical():
+    """PR-2 tentpole acceptance: 2 prefill + 6 decode (2 attention +
+    4 expert) disjoint device groups, KV rows migrated into the decode
+    cache at admission — token-identical to the inline-prefill engine
+    under both sync and async transfer."""
+    out = run_sub("""
+import jax, numpy as np
+assert jax.device_count() == 8, jax.device_count()
+from repro.config import get_config, reduced
+from repro.core.disagg import DisaggPlan, DisaggregatedInstance
+from repro.launch.mesh import split_serving_devices
+from repro.models import init_params
+from repro.serving.engine import Engine, Request
+from repro.serving.prefill import PrefillWorker
+cfg = reduced(get_config("mixtral-8x22b"))
+params = init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.RandomState(0)
+prompts = [rng.randint(2, cfg.vocab, size=rng.randint(2, 8)).tolist()
+           for _ in range(5)]
+def serve(**kw):
+    eng = Engine(cfg, params, max_batch=4, max_seq=64, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    return {r.rid: r.generated for r in eng.run_until_done()}, eng
+mono, _ = serve()
+prefill_devs, decode_devs = split_serving_devices(2)
+assert len(prefill_devs) == 2 and len(decode_devs) == 6
+assert not set(prefill_devs) & set(decode_devs), "clusters must be disjoint"
+for transfer in ("sync", "async"):
+    # expert group must divide n_experts (4 reduced): 2 attn + 4 expert
+    inst = DisaggregatedInstance(cfg, params,
+                                 attn_devices=decode_devs[:2],
+                                 expert_devices=decode_devs[2:],
+                                 plan=DisaggPlan(n_microbatches=2,
+                                                 use_m2n=True))
+    assert not (set(inst.attn_mesh.devices.flat) |
+                set(inst.expert_mesh.devices.flat)) & set(prefill_devs)
+    w = PrefillWorker(cfg, params, prefill_devs, max_seq=64)
+    pp, eng = serve(mode="pingpong", runtime=inst, prefill_worker=w,
+                    transfer=transfer, kv_sharding=inst.kv_sharding)
+    assert pp == mono, (transfer, pp, mono)
+    ph = eng.stats()["phases"]
+    assert ph["prefill_devices"] == 2 and ph["transfer_n"] == 5
+    assert ph["transfer_mode"] == transfer
+print("PREFILL-CLUSTER-8DEV-OK")
+""")
+    assert "PREFILL-CLUSTER-8DEV-OK" in out
+
+
 def test_m2n_sharded_dispatch_2x4_mesh():
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np

@@ -1,0 +1,298 @@
+"""Disaggregated prefill/decode cluster tests (PR-2 tentpole).
+
+Covers: the ``PrefillWorker`` transfer queue (FIFO order, same-length
+batching under the chunk budget, greedy first tokens), ``migrate_kv``
+(the prefill->decode KV-transfer hop), slot-release invalidation via
+``reset_row`` (a recycled KV slot never exposes the previous request's
+cache), token-for-token parity of the cluster-disaggregated engine vs
+the inline-prefill engine (monolithic and ping-pong decode, sync and
+async transfer), and a queue + slot-allocator property test.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal image without dev deps: seeded-random fallback
+    from _hypo_fallback import given, settings, strategies as st
+
+from repro.config import get_config, reduced
+from repro.core.disagg import DisaggPlan, DisaggregatedInstance
+from repro.models import init_cache, init_params, prefill
+from repro.serving.engine import Engine, Request
+from repro.serving.kvcache import (MicrobatchSlotAllocator, insert_rows,
+                                   mb_slot_ranges, migrate_kv, reset_row)
+from repro.serving.prefill import PrefillWorker
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = reduced(get_config("qwen2-moe-a2.7b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, n=6, seed=0, lengths=None):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(2, cfg.vocab,
+                        size=(lengths[i % len(lengths)] if lengths
+                              else rng.randint(2, 10))).tolist()
+            for i in range(n)]
+
+
+def _serve(cfg, params, prompts, max_new=5, max_batch=3, **engine_kw):
+    eng = Engine(cfg, params, max_batch=max_batch, max_seq=64, **engine_kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    done = {r.rid: r.generated for r in eng.run_until_done(max_iters=500)}
+    return done, eng
+
+
+def _fake_prefill(params, cfg, tokens, max_seq, **extras):
+    """Stand-in prefill for queue-mechanics tests: last-position logits
+    one-hot at the last prompt token (so the greedy first token equals
+    it), kv marker = the first prompt token (detects row mix-ups)."""
+    logits = jax.nn.one_hot(tokens[:, -1], cfg.vocab)
+    cache = {"blocks": (),
+             "remainder": ({"marker": tokens[:, :1].astype(jnp.int32)},)}
+    return logits, cache
+
+
+# ------------------------------------------------------------------ worker
+class TestPrefillWorker:
+    def test_fifo_order_and_greedy_first_token(self, moe_setup):
+        cfg, _ = moe_setup
+        w = PrefillWorker(cfg, {}, max_seq=64, prefill_fn=_fake_prefill)
+        prompts = _prompts(cfg, n=8, seed=1)
+        for i, p in enumerate(prompts):
+            w.submit(Request(rid=i, prompt=p))
+        assert w.pending_count == 8 and w.ready_count == 0
+        w.pump()
+        assert w.pending_count == 0 and w.ready_count == 8
+        for i, p in enumerate(prompts):
+            res = w.pop()
+            assert res.request.rid == i, "transfer queue broke FIFO order"
+            assert res.first_token == p[-1]
+            assert int(res.kv["remainder"][0]["marker"][0, 0]) == p[0]
+            assert res.n_prompt_tokens == len(p)
+        assert w.pop() is None
+
+    def test_same_length_prompts_batch_under_budget(self, moe_setup):
+        cfg, _ = moe_setup
+        w = PrefillWorker(cfg, {}, max_seq=64, chunk_tokens=64,
+                          prefill_fn=_fake_prefill)
+        for i, p in enumerate(_prompts(cfg, n=6, lengths=[4])):
+            w.submit(Request(rid=i, prompt=p))
+        w.pump()
+        # 6 prompts x 4 tokens = 24 <= 64: one batched prefill call
+        assert w.n_batches == 1 and w.n_prefills == 6
+
+    def test_chunk_budget_splits_batches(self, moe_setup):
+        cfg, _ = moe_setup
+        w = PrefillWorker(cfg, {}, max_seq=64, chunk_tokens=8,
+                          prefill_fn=_fake_prefill)
+        for i, p in enumerate(_prompts(cfg, n=6, lengths=[4])):
+            w.submit(Request(rid=i, prompt=p))
+        w.pump()
+        assert w.n_batches == 3  # 2 prompts x 4 tokens per chunk
+        assert [w.pop().request.rid for _ in range(6)] == list(range(6))
+
+    def test_mixed_lengths_never_share_a_batch(self, moe_setup):
+        cfg, _ = moe_setup
+        w = PrefillWorker(cfg, {}, max_seq=64, prefill_fn=_fake_prefill)
+        for i, p in enumerate(_prompts(cfg, n=4, lengths=[3, 7])):
+            w.submit(Request(rid=i, prompt=p))
+        w.pump()
+        assert w.n_batches == 4  # alternating lengths -> no batching
+        for i in range(4):
+            assert w.pop().request.rid == i
+
+    def test_pump_max_batches_bounds_work(self, moe_setup):
+        cfg, _ = moe_setup
+        w = PrefillWorker(cfg, {}, max_seq=64, prefill_fn=_fake_prefill)
+        for i, p in enumerate(_prompts(cfg, n=5, lengths=[3, 7])):
+            w.submit(Request(rid=i, prompt=p))
+        assert w.pump(max_batches=2) == 2
+        assert w.ready_count == 2 and w.pending_count == 3
+        w.pump()
+        assert w.ready_count == 5
+
+
+# ---------------------------------------------------------------- transfer
+class TestKVMigration:
+    def test_migrate_matches_insert_rows(self, moe_setup):
+        cfg, params = moe_setup
+        toks = jax.random.randint(jax.random.PRNGKey(3), (1, 6), 0, cfg.vocab)
+        _, rcache = prefill(params, cfg, toks, max_seq=32)
+        decode_cache = init_cache(cfg, 4, 32, jnp.float32)
+        want = insert_rows(decode_cache, rcache, 2)
+        for sync in (False, True):
+            got = migrate_kv(decode_cache, rcache, 2, sync=sync)
+            for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_migrate_respects_target_sharding(self, moe_setup):
+        cfg, params = moe_setup
+        toks = jax.random.randint(jax.random.PRNGKey(4), (1, 4), 0, cfg.vocab)
+        _, rcache = prefill(params, cfg, toks, max_seq=32)
+        decode_cache = init_cache(cfg, 2, 32, jnp.float32)
+        inst = DisaggregatedInstance(cfg, params,
+                                     plan=DisaggPlan(n_microbatches=1))
+        got = migrate_kv(decode_cache, rcache, 0,
+                         sharding=inst.kv_sharding, sync=True)
+        leaf = jax.tree.leaves(got)[0]
+        assert set(leaf.sharding.device_set) == set(
+            inst.attn_mesh.devices.flat)
+
+
+# ---------------------------------------------------------- slot recycling
+class TestSlotRecycling:
+    def test_reset_row_invalidates_kv(self, moe_setup):
+        cfg, params = moe_setup
+        toks = jax.random.randint(jax.random.PRNGKey(5), (1, 5), 0, cfg.vocab)
+        _, rcache = prefill(params, cfg, toks, max_seq=32)
+        cache = insert_rows(init_cache(cfg, 3, 32, jnp.float32), rcache, 1)
+        cache = reset_row(cache, cfg, 1, 32)
+        for part in ("blocks", "remainder"):
+            for entry in cache[part]:
+                if "pos" in entry:
+                    p = np.asarray(entry["pos"])
+                    row = p[:, 1] if p.ndim == 3 else p[1]
+                    assert (row == -1).all(), "released row still valid"
+
+    def test_engine_invalidates_released_slot(self, moe_setup):
+        """After a request finishes, its KV row must be reset before any
+        reuse — the recycled slot never sees the old cache state."""
+        cfg, params = moe_setup
+        eng = Engine(cfg, params, max_batch=2, max_seq=64)
+        eng.submit(Request(rid=0, prompt=[5, 6, 7], max_new_tokens=3))
+        eng.run_until_done(max_iters=50)
+        slot = eng.finished[0].slot
+        for part in ("blocks", "remainder"):
+            for entry in eng.cache[part]:
+                if "pos" in entry:
+                    p = np.asarray(entry["pos"])
+                    row = p[:, slot] if p.ndim == 3 else p[slot]
+                    assert (row == -1).all(), \
+                        "engine left stale KV in a released slot"
+
+    def test_recycled_slot_token_parity(self, moe_setup):
+        """Requests recycled through one KV slot generate exactly what
+        they generate alone (stale-state leak would diverge)."""
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, n=3, seed=7)
+        solo = [_serve(cfg, params, [p], max_batch=1)[0][0] for p in prompts]
+        churned, eng = _serve(cfg, params, prompts, max_batch=1)
+        assert eng.stats()["prefills"] == 3  # all through the same slot
+        for i in range(3):
+            assert churned[i] == solo[i]
+
+
+# ------------------------------------------------------------------ parity
+class TestDisaggPrefillParity:
+    def test_monolithic_decode_parity(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, n=6, seed=11)
+        mono, _ = _serve(cfg, params, prompts)
+        for transfer in ("sync", "async"):
+            w = PrefillWorker(cfg, params, max_seq=64)
+            got, eng = _serve(cfg, params, prompts, prefill_worker=w,
+                              transfer=transfer)
+            assert got == mono, f"transfer={transfer} diverged"
+            ph = eng.stats()["phases"]
+            assert ph["prefills"] == 6 and ph["transfer_n"] == 6
+            assert ph["transfer_mode"] == transfer
+
+    def test_pingpong_decode_parity(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, n=6, seed=13)
+        mono, _ = _serve(cfg, params, prompts)
+        for transfer in ("sync", "async"):
+            inst = DisaggregatedInstance(cfg, params,
+                                         plan=DisaggPlan(n_microbatches=2))
+            w = PrefillWorker(cfg, params, max_seq=64)
+            got, eng = _serve(cfg, params, prompts, mode="pingpong",
+                              runtime=inst, prefill_worker=w,
+                              transfer=transfer,
+                              kv_sharding=inst.kv_sharding)
+            assert got == mono, f"transfer={transfer} diverged"
+            stats = eng.stats()
+            assert stats["disagg_prefill"]
+            assert stats["phases"]["decode_s"] > 0
+            assert stats["stages"]["attn_n"] > 0
+
+    def test_batched_prefill_parity(self, moe_setup):
+        """Same-length prompts share one prefill batch on the worker and
+        still emit exactly the inline engine's tokens."""
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, n=6, seed=17, lengths=[5])
+        mono, _ = _serve(cfg, params, prompts)
+        w = PrefillWorker(cfg, params, max_seq=64, chunk_tokens=64)
+        got, eng = _serve(cfg, params, prompts, prefill_worker=w)
+        assert got == mono
+        assert eng.stats()["phases"]["prefill_batches"] < 6
+
+    def test_bad_transfer_mode_rejected(self, moe_setup):
+        cfg, params = moe_setup
+        with pytest.raises(ValueError):
+            Engine(cfg, params, transfer="dma")
+
+
+# -------------------------------------------------------------- properties
+class TestQueueProperties:
+    @given(st.lists(st.integers(2, 9), min_size=1, max_size=24),
+           st.integers(1, 4), st.integers(1, 32), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_worker_queue_and_slot_allocator_invariants(
+            self, plens, n_groups, chunk_tokens, seed):
+        """Random request streams through PrefillWorker +
+        MicrobatchSlotAllocator: FIFO completion, every request admitted
+        exactly once, first tokens uncorrupted by batching, and no KV
+        slot double-assignment under churn."""
+        import random
+        cfg = reduced(get_config("qwen2-moe-a2.7b"))
+        rng = random.Random(seed)
+        n_slots = 4
+        w = PrefillWorker(cfg, {}, max_seq=64, chunk_tokens=chunk_tokens,
+                          prefill_fn=_fake_prefill)
+        alloc = MicrobatchSlotAllocator(
+            n_slots, mb_slot_ranges(n_slots, min(n_groups, n_slots)))
+        reqs = [Request(rid=i,
+                        prompt=[rng.randrange(2, cfg.vocab)
+                                for _ in range(plens[i])])
+                for i in range(len(plens))]
+        submitted = 0
+        admitted = []          # rids in admission order
+        live = {}              # rid -> slot
+        while len(admitted) < len(reqs) or live:
+            action = rng.random()
+            if submitted < len(reqs) and action < 0.4:
+                w.submit(reqs[submitted])
+                submitted += 1
+            elif action < 0.6:
+                w.pump(max_batches=1)
+            elif live and action < 0.8:
+                rid = rng.choice(list(live))
+                slot = alloc.release(rid)
+                assert slot == live.pop(rid)
+            else:
+                w.pump()
+                while alloc.free and w.ready_count:
+                    res = w.pop()
+                    assert res.first_token == res.request.prompt[-1]
+                    slot = alloc.alloc(res.request.rid)
+                    assert slot is not None
+                    assert slot not in live.values(), "slot double-assigned"
+                    live[res.request.rid] = slot
+                    admitted.append(res.request.rid)
+                if submitted == len(reqs) and not w.ready_count \
+                        and not w.pending_count and live:
+                    rid = rng.choice(list(live))
+                    assert alloc.release(rid) == live.pop(rid)
+            held = sorted(live.values())
+            assert sorted(alloc.free + held) == list(range(n_slots))
+        assert admitted == sorted(admitted) == list(range(len(reqs))), \
+            "transfer-queue admission broke submission order"
+        assert w.n_prefills == len(reqs)
