@@ -36,10 +36,21 @@ CONFIGS = (
     # the PR-2 tentpole: prefill on its own cluster, KV rows migrated
     # into the decode cache at admission (async transfer)
     ("pingpong_disagg_prefill", {"prefill_devices": 1, "transfer": "async"}),
+    # the PR-3 tentpole: zipf(1.2)-skewed routing, static placement vs
+    # live load-balanced placement with hot-expert replication.  The
+    # gate floors cover tok/s + speedup; token-identity and the
+    # imbalance-vs-static property are asserted by the test suites
+    # (single-CPU runs degenerate to one expert node, imbalance 1.0)
+    ("pingpong_zipf_static", {"zipf_route_bias": 1.2}),
+    ("pingpong_zipf_rebalanced", {"zipf_route_bias": 1.2,
+                                  "expert_rebalance_every": 2}),
 )
 
 PHASE_KEYS = ("prefill_s", "transfer_s", "decode_s", "prefills",
               "transfer_n", "transfer_mode", "prefill_batches")
+# live expert-balance report (present for runtimes with a disagg handle)
+BALANCE_KEYS = ("imbalance", "rebalances", "replicated_experts",
+                "rebalance_s")
 # gate tolerances are relative drops vs the committed baseline
 CHECKED_KEYS = ("decode_tok_per_s", "vs_monolithic")
 
@@ -60,6 +71,7 @@ def _entry(best: dict, runs: list) -> dict:
     entry["tok_per_s_runs"] = runs
     entry["phases"] = {k: best["phases"][k] for k in PHASE_KEYS
                        if k in best["phases"]}
+    entry.update({k: best[k] for k in BALANCE_KEYS if k in best})
     if "stages" in best:
         entry["stages"] = {k: v for k, v in best["stages"].items()
                            if k in ("t_a", "t_e", "t_c")}
@@ -131,11 +143,28 @@ def combine_baselines(collects: list) -> dict:
     return out
 
 
+def _describe_baseline(baseline: dict, name: str) -> str:
+    """One-line provenance of a committed baseline entry: the machine
+    class / workload it was recorded on plus the entry's keys — printed
+    instead of dying with a bare KeyError when the gated key set has
+    drifted between the fresh code and the committed JSON."""
+    wl = baseline.get("workload", {})
+    machine = {k: wl[k] for k in ("device", "arch") if k in wl}
+    entry_keys = sorted(baseline["results"].get(name, {}))
+    return (f"baseline recorded on {machine or 'unknown machine class'}; "
+            f"{name!r} entry keys: {entry_keys}")
+
+
 def check(fresh: dict, baseline: dict, tolerance: float = 0.15) -> list:
     """Compare a fresh ``collect()`` result against the committed
     baseline payload.  Returns ``(config_name, message)`` regression
     tuples (empty = gate passes).  New configs absent from the baseline
-    pass by construction; configs *removed* from the fresh run fail."""
+    pass by construction; configs *removed* from the fresh run fail.
+    A gated key missing from the committed baseline (schema drift: the
+    code gained a metric the JSON predates) is reported with the
+    baseline's provenance and skipped instead of dying with a bare
+    KeyError — regenerate the baseline to realign.  A gated key missing
+    from the *fresh* run is a code regression and fails."""
     failures = []
     for name, base in baseline["results"].items():
         got = fresh.get(name)
@@ -146,6 +175,19 @@ def check(fresh: dict, baseline: dict, tolerance: float = 0.15) -> list:
         for key in CHECKED_KEYS:
             if name == "monolithic" and key == "vs_monolithic":
                 continue  # identically 1.0
+            if key not in got:
+                # the fresh run must always emit every gated key — a
+                # missing one is a code regression, not schema drift
+                failures.append(
+                    (name, f"{name}.{key}: missing from fresh run "
+                           f"({_describe_baseline(baseline, name)})"))
+                continue
+            if key not in base:
+                print(f"serve_bench --check: key {name}.{key} missing from "
+                      f"baseline — {_describe_baseline(baseline, name)}; "
+                      f"skipping this key (regenerate the baseline to "
+                      f"realign)", file=sys.stderr)
+                continue
             floor = base[key] * (1.0 - tolerance)
             if got[key] < floor:
                 failures.append(
@@ -168,7 +210,11 @@ def check_with_retries(results: dict, baseline: dict, tolerance: float,
     by_name = dict(CONFIGS)
     failures = check(results, baseline, tolerance)
     for _ in range(max_retries):
-        flagged = {name for name, _ in failures if name in by_name}
+        # only numeric regressions can be measurement noise; structural
+        # failures (config/key missing from the fresh run) are
+        # deterministic and re-measuring cannot fix them
+        flagged = {name for name, msg in failures
+                   if name in by_name and "missing" not in msg}
         if not flagged:
             break
         print(f"retrying flagged configs to rule out noise: "
@@ -189,10 +235,14 @@ def run():
     # statistically careful consumer)
     results = collect(repeats=1)
     for name, r in results.items():
+        extra = (f", imbalance={r['imbalance']:.2f}"
+                 f" ({r.get('rebalances', 0)} rebalances)"
+                 if "imbalance" in r else "")
         emit(f"serve_{name}", 1e6 / max(r["decode_tok_per_s"], 1e-9),
              f"{r['tokens']} tokens, {r['decode_iters']} decode iters, "
              f"{r['decode_tok_per_s']:.1f} tok/s, "
-             f"{r['vs_monolithic']:.2f}x vs monolithic (reduced mixtral, CPU)")
+             f"{r['vs_monolithic']:.2f}x vs monolithic{extra} "
+             f"(reduced mixtral, CPU)")
 
 
 def main():
@@ -226,8 +276,10 @@ def main():
         failures = check_with_retries(results, baseline, args.tolerance,
                                       args.repeats)
     for name, r in results.items():
+        extra = (f", imbalance={r['imbalance']:.2f}"
+                 if "imbalance" in r else "")
         print(f"{name}: {r['decode_tok_per_s']:.1f} tok/s "
-              f"({r['vs_monolithic']:.2f}x vs monolithic)")
+              f"({r['vs_monolithic']:.2f}x vs monolithic{extra})")
     if args.out:
         payload = {
             "benchmark": "serve_bench",

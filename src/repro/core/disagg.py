@@ -47,6 +47,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import ModelConfig
+from repro.core import load_balance as lb_lib
 from repro.core import m2n as m2n_lib
 from repro.core import pingpong
 from repro.models import moe as moe_lib
@@ -98,6 +99,10 @@ class DisaggPlan:
     # block after every stage so stage_report() reflects device wall time
     # (accurate but serialising; leave False to keep the pipeline async)
     profile_stages: bool = False
+    # per-node virtual expert slot budget for live placements, as a
+    # multiple of ceil(E/N) — headroom for hot-expert replicas (§6).
+    # Fixed at construction so rebalances never change jitted shapes.
+    replication_slots: float = 2.0
 
 
 class DisaggregatedInstance:
@@ -138,14 +143,21 @@ class DisaggregatedInstance:
 
         self.layers_attn: List[dict] = []
         self.layers_expert: List[Optional[dict]] = []
+        # un-placed expert weights, kept to regather on live rebalances
+        # (apply_placement) — the §6 replication path needs the global
+        # (E, ...) arrays to build per-node virtual-slot copies from
+        self._moe_raw: List[Optional[dict]] = []
         for l in range(cfg.n_layers):
             lp = _slice_layer_params(params, cfg, l)
             self.layers_attn.append(attn_side(lp))
             if cfg.moe is not None:
-                self.layers_expert.append({k: lp[k] for k in EXPERT_KEYS})
+                le = {k: lp[k] for k in EXPERT_KEYS}
+                self.layers_expert.append(le)
+                self._moe_raw.append(le)
             else:
                 self.layers_expert.append(
                     {"w1": lp["w1"], "w3": lp["w3"], "w2": lp["w2"]})
+                self._moe_raw.append(None)
         self.head = {k: params[k] for k in ("embed", "final_norm", "lm_head")
                      if k in params}
 
@@ -164,16 +176,40 @@ class DisaggregatedInstance:
         self.layers_expert = [
             jax.device_put(le, ep_shard) for le in self.layers_expert]
         # the M2N path computes routing on the expert shards (replicated
-        # over "ep"), so each MoE layer's router also lives on that mesh
-        self.layers_router_ep: List[Optional[jax.Array]] = [None] * cfg.n_layers
+        # over "ep"), so each MoE layer's router (and optional logit
+        # bias) also lives on that mesh
+        self.layers_router_ep: List[Optional[dict]] = [None] * cfg.n_layers
         if cfg.moe is not None and plan.use_m2n:
             rep_e = NamedSharding(self.expert_mesh, P())
-            self.layers_router_ep = [
-                jax.device_put(_slice_layer_params(params, cfg, l)["router"],
-                               rep_e)
-                for l in range(cfg.n_layers)]
+            routers = []
+            for l in range(cfg.n_layers):
+                lp = _slice_layer_params(params, cfg, l)
+                rp = {"router": lp["router"]}
+                if "router_bias" in lp:
+                    rp["router_bias"] = lp["router_bias"]
+                routers.append(jax.device_put(rp, rep_e))
+            self.layers_router_ep = routers
+
+        # ---- live expert placement (§6) ----------------------------------
+        # placement starts out static (contiguous expert blocks); the
+        # serving engine may re-solve it from live routing counts and
+        # apply_placement() a replicated layout without changing shapes
+        self.placement: Optional[lb_lib.Placement] = None
+        self.tables: Optional[lb_lib.PlacementTables] = None
+        self.layers_expert_placed: Optional[List[dict]] = None
+        self._tables_dev = None
+        self._tables_dev_ep = None
+        self._active_slots: Optional[jax.Array] = None
+        if cfg.moe is not None:
+            e_loc = -(-cfg.moe.n_experts // self.n_expert_nodes)
+            self.placement_slots = min(
+                cfg.moe.n_experts,
+                max(e_loc, int(round(e_loc * plan.replication_slots))))
+        else:
+            self.placement_slots = 0
 
         self.reset_stage_times()
+        self.reset_expert_counts()
         self.last_trace: List[tuple] = []
         self._build_jits()
 
@@ -189,7 +225,7 @@ class DisaggregatedInstance:
         cfg = self.cfg
         rep_e = NamedSharding(self.expert_mesh, P())
 
-        def attn_phase(p, x, cache, pos, window):
+        def attn_phase(p, x, act, cache, pos, window, tbl=None):
             delta, new_cache = self_attn_decode_sublayer(p, cfg, x, pos,
                                                          cache, window)
             x = x + delta
@@ -198,14 +234,32 @@ class DisaggregatedInstance:
                 # m2n: routing+dispatch happen on the expert shards; only
                 # the (T, d) activations cross the wire
                 return x, h, new_cache, None
-            routing = moe_lib.route(h, p["router"], cfg.moe.top_k)
+            routing = moe_lib.route(h, p["router"], cfg.moe.top_k,
+                                    p.get("router_bias"))
+            # idle KV rows are decoded anyway (static batch shape) but
+            # must not pollute the live traffic trace
+            counts = moe_lib.routing_counts(routing, cfg.moe.n_experts, act)
             cap = moe_lib.expert_capacity(h.shape[0], cfg.moe,
                                           self.plan.capacity_mode)
+            if tbl is None:
+                n_buckets = cfg.moe.n_experts
+            else:
+                # live placement: route each (token, k) to one replica of
+                # its expert — a virtual slot id in the node-major
+                # (N*S, ...) gathered weight layout.  Same expert
+                # weights, same combine → token-identical output.
+                vslot, _ = moe_lib.replica_assign(
+                    routing.experts, tbl["rep_node"], tbl["rep_slot"],
+                    tbl["rep_cum"],
+                    slots_per_node=self.placement_slots)
+                routing = moe_lib.Routing(routing.gates, vslot,
+                                          routing.probs)
+                n_buckets = self.n_expert_nodes * self.placement_slots
             idx_buf, gate_buf = moe_lib.dispatch_indices(
-                routing, cfg.moe.n_experts, cap)
+                routing, n_buckets, cap)
             xe = h.at[idx_buf].get(mode="fill", fill_value=0)  # (E, C, d)
             return x, h, new_cache, {"xe": xe, "idx": idx_buf,
-                                     "gates": gate_buf}
+                                     "gates": gate_buf, "counts": counts}
 
         def expert_phase_moe(pe, xe):
             if self.plan.use_kernels:
@@ -220,12 +274,15 @@ class DisaggregatedInstance:
         def expert_phase_dense(pe, h):
             return gated_ffn(h, pe["w1"], pe["w3"], pe["w2"], cfg.act)
 
-        def expert_phase_m2n(pe, router_w, h):
-            y, _aux = m2n_lib.sharded_routed_experts(
-                dict(pe, router=router_w), h, cfg.moe, cfg.act,
+        def expert_phase_m2n(pe, router_p, h, act, tbl=None):
+            if tbl is not None:
+                tbl = dict(tbl, slots_per_node=self.placement_slots)
+            y, _aux, counts = m2n_lib.sharded_routed_experts(
+                dict(pe, **router_p), h, cfg.moe, cfg.act,
                 self.plan.capacity_mode, mesh=self.expert_mesh,
-                data_axes=(), expert_axis="ep")
-            return y
+                data_axes=(), expert_axis="ep", tables=tbl,
+                with_counts=True, count_weights=act)
+            return y, counts
 
         def combine_tail(p, x, h, y):
             if "ws1" in p:   # shared experts stay with attention (dense)
@@ -263,7 +320,14 @@ class DisaggregatedInstance:
             return _lm_head(head, cfg, x)
 
         self._attn_phase = {
-            w: jax.jit(lambda p, x, c, pos, w=w: attn_phase(p, x, c, pos, w))
+            w: jax.jit(lambda p, x, a, c, pos, w=w:
+                       attn_phase(p, x, a, c, pos, w))
+            for w in {0, cfg.window}}
+        # placed variants thread the placement lookup tables through the
+        # dispatch; traced lazily on the first rebalanced decode step
+        self._attn_phase_placed = {
+            w: jax.jit(lambda p, tbl, x, a, c, pos, w=w:
+                       attn_phase(p, x, a, c, pos, w, tbl))
             for w in {0, cfg.window}}
         ein = NamedSharding(self.expert_mesh, self.expert_in_spec)
         if cfg.moe is not None and self.plan.use_m2n:
@@ -272,6 +336,10 @@ class DisaggregatedInstance:
             ein = rep_e
             self._expert_phase = jax.jit(expert_phase_m2n,
                                          out_shardings=rep_e)
+            self._expert_phase_placed = jax.jit(
+                lambda pe, rp, tbl, h, a: expert_phase_m2n(pe, rp, h, a,
+                                                           tbl),
+                out_shardings=rep_e)
         elif cfg.moe is not None:
             self._expert_phase = jax.jit(expert_phase_moe,
                                          in_shardings=(None, ein),
@@ -287,6 +355,120 @@ class DisaggregatedInstance:
         self._lm_head = jax.jit(lm_head)
         self._expert_sharding = ein
         self._attn_rep = NamedSharding(self.attn_mesh, P())
+
+    # ----------------------------------------------- live expert placement
+    def apply_placement(self, placement: lb_lib.Placement):
+        """Install a (possibly replicated) expert placement in the live
+        serving path (paper §6).
+
+        The fractional ``Placement`` is compiled to lookup tables under
+        this instance's fixed per-node slot budget
+        (``placement_slots``), and every MoE layer's expert weights are
+        regathered node-major into (N*S, ...) virtual-slot arrays on the
+        expert mesh — replicated hot experts occupy one slot per hosting
+        node.  Shapes are placement-independent, so repeated rebalances
+        swap array contents without recompiling, and token routing stays
+        deterministic (replica choice hashes the token index), keeping
+        outputs token-identical to the static placement.
+
+        Returns True when the placement was installed, False when the
+        solved tables match the ones already being served (steady
+        state) and the regather/upload was skipped."""
+        if self.cfg.moe is None:
+            raise ValueError("expert placement needs an MoE config")
+        if self.plan.capacity_mode != "full":
+            # bounded capacity is priced per dispatch bucket: splitting a
+            # replicated expert over several buckets changes which tokens
+            # overflow vs the static path, so the token-identity guarantee
+            # only holds for the drop-free serving capacity
+            raise ValueError(
+                f"live placement requires capacity_mode='full' (drop-free); "
+                f"got {self.plan.capacity_mode!r}")
+        tables = lb_lib.placement_tables(placement, self.placement_slots)
+        if tables.n_nodes != self.n_expert_nodes:
+            raise ValueError(f"placement solved for {tables.n_nodes} nodes, "
+                             f"runtime has {self.n_expert_nodes}")
+        if self._placement_unchanged(tables):
+            # steady state: same slot layout and (near-)same traffic
+            # split — skip the full per-layer weight regather/upload, the
+            # dominant cost of frequent rebalance intervals
+            return False
+        flat = tables.slot_experts.reshape(-1)
+        gather = jnp.asarray(np.where(flat < 0, 0, flat), jnp.int32)
+        ep_shard = NamedSharding(self.expert_mesh, P("ep"))
+        self.layers_expert_placed = [
+            {k: jax.device_put(raw[k][gather], ep_shard)
+             for k in EXPERT_KEYS}
+            for raw in self._moe_raw]
+        tbl = {"rep_node": jnp.asarray(tables.rep_node),
+               "rep_slot": jnp.asarray(tables.rep_slot),
+               "rep_cum": jnp.asarray(tables.rep_cum)}
+        # the baseline path reads the tables on the attention side (the
+        # router runs there); the m2n path reads them on the expert mesh
+        self._tables_dev = jax.device_put(
+            tbl, NamedSharding(self.attn_mesh, P()))
+        self._tables_dev_ep = jax.device_put(
+            tbl, NamedSharding(self.expert_mesh, P()))
+        self.placement = placement
+        self.tables = tables
+        return True
+
+    def _placement_unchanged(self, tables: lb_lib.PlacementTables,
+                             cum_tol: float = 0.05) -> bool:
+        """True when ``tables`` would serve (essentially) the placement
+        already installed: identical expert->slot layout and replica
+        traffic splits within ``cum_tol``.  Any placement is output-
+        correct, so keeping a split that moved by <tol is free — it only
+        leaves the traffic shares marginally stale."""
+        cur = self.tables
+        return (cur is not None
+                and np.array_equal(cur.slot_experts, tables.slot_experts)
+                and np.array_equal(cur.rep_node, tables.rep_node)
+                and np.array_equal(cur.rep_slot, tables.rep_slot)
+                and np.abs(cur.rep_cum - tables.rep_cum).max() <= cum_tol)
+
+    @property
+    def placement_fractions(self) -> np.ndarray:
+        """Effective (M, N) expert->node fractions the runtime serves:
+        the applied placement's post-repair fractions, or the static
+        contiguous-block layout before any rebalance."""
+        if self.tables is not None:
+            return self.tables.fractions
+        E = self.cfg.moe.n_experts
+        return lb_lib.static_placement(E, self.n_expert_nodes).fractions
+
+    # ------------------------------------------------------ routing counts
+    def set_active_slots(self, active):
+        """Mark which KV slots currently serve a request ((B,) 0/1).
+
+        The engine decodes every slot each iteration (static batch
+        shape); the mask keeps idle rows out of the accumulated routing
+        counts so the load balancer solves for real traffic only.
+        ``None`` restores the default (count every row)."""
+        self._active_slots = (None if active is None
+                              else jnp.asarray(active, jnp.float32))
+
+    def reset_expert_counts(self):
+        """Zero the accumulated per-expert routed-token counts."""
+        E = self.cfg.moe.n_experts if self.cfg.moe is not None else 0
+        # separate accumulators per source mesh (attention-side routing
+        # in the baseline path, expert-shard routing under m2n) so the
+        # lazy per-layer adds never force a cross-mesh transfer
+        self._counts_attn = jnp.zeros((E,), jnp.float32)
+        self._counts_ep = jnp.zeros((E,), jnp.float32)
+
+    def peek_expert_counts(self) -> np.ndarray:
+        """Per-expert routed-token counts since the last reset (blocks
+        on the device accumulators)."""
+        return (np.asarray(self._counts_attn, np.float64)
+                + np.asarray(self._counts_ep, np.float64))
+
+    def take_expert_counts(self) -> np.ndarray:
+        """``peek_expert_counts`` + reset — one sliding-window interval
+        of live expert traffic for ``balance_experts``."""
+        counts = self.peek_expert_counts()
+        self.reset_expert_counts()
+        return counts
 
     # ------------------------------------------------------- stage timing
     def reset_stage_times(self):
@@ -389,14 +571,22 @@ class DisaggregatedInstance:
 
         xs = [self._embed(self.head, tokens[s]) for s in mbs]
         poss = [pos[s] for s in mbs]
+        # active-slot mask (set_active_slots): engine-marked live rows;
+        # idle KV slots decode anyway but are masked out of the traffic
+        # trace.  Default: every row counts (standalone decode_step use)
+        act = (self._active_slots if self._active_slots is not None
+               else jnp.ones((B,), jnp.float32))
+        acts = [act[s] for s in mbs]
         # per-(mb, layer) cache entries are indexed lazily below
 
+        placed = self.layers_expert_placed is not None
         new_cache_entries = [[None] * cfg.n_layers for _ in mbs]
         for l in range(cfg.n_layers):
             kind = _layer_kind(cfg, l)
             window = cfg.window if kind == "local" else 0
             pa = self.layers_attn[l]
-            pe = self.layers_expert[l]
+            pe = (self.layers_expert_placed[l] if placed
+                  else self.layers_expert[l])
             inflight: deque = deque()
 
             def drain_one():
@@ -415,9 +605,18 @@ class DisaggregatedInstance:
 
             for i, s in enumerate(mbs):
                 entry = self._cache_entry(cache, l, s)
-                x, h, new_entry, disp = self._timed(
-                    "attn", self._attn_phase[window], pa, xs[i], entry,
-                    poss[i])
+                if placed and not self.plan.use_m2n:
+                    x, h, new_entry, disp = self._timed(
+                        "attn", self._attn_phase_placed[window], pa,
+                        self._tables_dev, xs[i], acts[i], entry, poss[i])
+                else:
+                    x, h, new_entry, disp = self._timed(
+                        "attn", self._attn_phase[window], pa, xs[i],
+                        acts[i], entry, poss[i])
+                if disp is not None and "counts" in disp:
+                    # lazy device add — the live traffic trace for the
+                    # engine's periodic §6 rebalance; never blocks
+                    self._counts_attn = self._counts_attn + disp["counts"]
                 new_cache_entries[i][l] = new_entry
                 trace.append(("attn", i, l))
                 # M2N dispatch hop: routed capacity buffers in the
@@ -426,8 +625,16 @@ class DisaggregatedInstance:
                 buf = self._timed("m2n", jax.device_put, payload,
                                   self._expert_sharding)
                 if cfg.moe is not None and self.plan.use_m2n:
-                    out = self._timed("expert", self._expert_phase, pe,
-                                      self.layers_router_ep[l], buf)
+                    if placed:
+                        out, cnt = self._timed(
+                            "expert", self._expert_phase_placed, pe,
+                            self.layers_router_ep[l], self._tables_dev_ep,
+                            buf, acts[i])
+                    else:
+                        out, cnt = self._timed(
+                            "expert", self._expert_phase, pe,
+                            self.layers_router_ep[l], buf, acts[i])
+                    self._counts_ep = self._counts_ep + cnt
                 else:
                     out = self._timed("expert", self._expert_phase, pe, buf)
                 trace.append(("expert", i, l))

@@ -25,7 +25,7 @@ MoE layer in the model then routes through this path.
 from __future__ import annotations
 
 import contextlib
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -54,11 +54,18 @@ def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
                            mesh: jax.sharding.Mesh,
                            data_axes: Sequence[str] = ("data",),
                            expert_axis: str = "model",
-                           weights_2d: bool = False):
+                           weights_2d: bool = False,
+                           tables: Optional[dict] = None,
+                           with_counts: bool = False,
+                           count_weights: Optional[jax.Array] = None):
     """M2N routed-experts computation under shard_map.
 
     x: (T, d) sharded over ``data_axes``; expert weights sharded over
-    ``expert_axis``.  Returns (y (T,d), aux scalar).
+    ``expert_axis``.  Returns (y (T,d), aux scalar) — plus a per-expert
+    routed-token count vector (E,) when ``with_counts`` (the live
+    traffic trace the serving engine feeds the §6 load balancer;
+    ``count_weights`` (T,) optionally masks rows out of the trace, e.g.
+    idle KV slots).
 
     weights_2d: additionally shard the expert d_ff dimension over the
     data axes (weight-stationary 2D — the §Perf pair-1 iteration-2
@@ -66,31 +73,68 @@ def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
     all-gathers the tokens over the data axes, computes its (expert
     slice x d_ff slice) of the MLP, and the f-partial products are
     psum'd over the data axes.  Intended for decode-sized batches.
+
+    tables: executable expert placement (jax arrays mirroring
+    ``core.load_balance.PlacementTables``: rep_node/rep_slot/rep_cum
+    (E, R) plus int "slots_per_node").  When set, ``params["we*"]`` must
+    be the *virtual-slot* weights gathered node-major to (N*S, d, f),
+    expert ownership follows the placement's (possibly replicated)
+    replica assignment — split deterministically by token-index hash —
+    instead of the contiguous-block default, and the output stays
+    token-identical to the unreplicated dispatch.
     """
     n_shards = mesh.shape[expert_axis]
     E = cfg.n_experts
-    e_pad = -(-E // n_shards) * n_shards
-    e_loc = e_pad // n_shards
-    we1 = _pad_experts(params["we1"], e_pad)
-    we3 = _pad_experts(params["we3"], e_pad)
-    we2 = _pad_experts(params["we2"], e_pad)
+    if tables is not None:
+        if weights_2d:
+            raise NotImplementedError("placement tables are not supported "
+                                      "with weights_2d")
+        S = int(tables["slots_per_node"])
+        e_loc = S
+        we1, we3, we2 = params["we1"], params["we3"], params["we2"]
+        if we1.shape[0] != n_shards * S:
+            raise ValueError(f"placed expert weights must be gathered to "
+                             f"(N*S={n_shards * S}, ...), got {we1.shape}")
+        tbl_args = (tables["rep_node"], tables["rep_slot"],
+                    tables["rep_cum"])
+    else:
+        e_pad = -(-E // n_shards) * n_shards
+        e_loc = e_pad // n_shards
+        we1 = _pad_experts(params["we1"], e_pad)
+        we3 = _pad_experts(params["we3"], e_pad)
+        we2 = _pad_experts(params["we2"], e_pad)
+        tbl_args = ()
     router_w = params["router"]
+    bias = params.get("router_bias")
+    if bias is None:
+        bias = jnp.zeros((E,), jnp.float32)
+    if count_weights is None:
+        count_weights = jnp.ones((x.shape[0],), jnp.float32)
     dtuple = tuple(data_axes)
 
-    def local_fn(x_loc, router_w, w1, w3, w2):
+    def local_fn(x_loc, router_w, bias, cw, w1, w3, w2, *tbl):
         if weights_2d and dtuple:
             # gather the (tiny) token batch so every shard sees all rows
             x_all = jax.lax.all_gather(x_loc, dtuple, axis=0, tiled=True)
+            cw = jax.lax.all_gather(cw, dtuple, axis=0, tiled=True)
         else:
             x_all = x_loc
         # 1. routing — replicated across the expert axis (paper: gating is
         #    fused on the attention side; every expert shard knows the plan)
-        routing = moe_lib.route(x_all, router_w, cfg.top_k)
+        routing = moe_lib.route(x_all, router_w, cfg.top_k, bias)
         aux = moe_lib.load_balance_loss(routing, E)
+        counts = moe_lib.routing_counts(routing, E, cw)
         j = jax.lax.axis_index(expert_axis)
-        owner = routing.experts // e_loc
-        local = owner == j
-        local_ids = jnp.where(local, routing.experts - j * e_loc, 0)
+        if tbl:
+            # placement-table ownership: token-hash replica assignment
+            vslot, node = moe_lib.replica_assign(routing.experts, *tbl,
+                                                 slots_per_node=e_loc)
+            local = node == j
+            local_ids = jnp.where(local, vslot - j * e_loc, 0)
+        else:
+            owner = routing.experts // e_loc
+            local = owner == j
+            local_ids = jnp.where(local, routing.experts - j * e_loc, 0)
         t_all = x_all.shape[0]
         cap = moe_lib.expert_capacity(t_all, cfg, capacity_mode)
         # 2. dispatch: gather ONLY locally-routed tokens — no wire traffic
@@ -119,19 +163,28 @@ def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
             t_loc = x_loc.shape[0]
             y = jax.lax.dynamic_slice_in_dim(y, idx * t_loc, t_loc, 0)
         aux = jax.lax.pmean(aux, dtuple) if dtuple else aux
-        return y.astype(x_loc.dtype), aux
+        if dtuple and not weights_2d:
+            # routing ran per data shard over local rows only
+            counts = jax.lax.psum(counts, dtuple)
+        res = (y.astype(x_loc.dtype), aux)
+        return res + (counts,) if with_counts else res
 
     w_specs = (P(expert_axis, None, dtuple), P(expert_axis, None, dtuple),
                P(expert_axis, dtuple, None)) if weights_2d else (
         P(expert_axis, None, None), P(expert_axis, None, None),
         P(expert_axis, None, None))
+    tbl_specs = (P(None, None),) * len(tbl_args)
+    out_specs = (P(dtuple, None), P())
+    if with_counts:
+        out_specs = out_specs + (P(),)
     fn = shard_map(
         local_fn, mesh=mesh,
-        in_specs=(P(dtuple, None), P(None, None)) + w_specs,
-        out_specs=(P(dtuple, None), P()),
+        in_specs=(P(dtuple, None), P(None, None), P(None), P(dtuple))
+        + w_specs + tbl_specs,
+        out_specs=out_specs,
         **_SHARD_MAP_KWARGS,
     )
-    return fn(x, router_w, we1, we3, we2)
+    return fn(x, router_w, bias, count_weights, we1, we3, we2, *tbl_args)
 
 
 @contextlib.contextmanager

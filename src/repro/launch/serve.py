@@ -16,6 +16,7 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.config import get_config, reduced
@@ -45,11 +46,51 @@ def _format_phases(ph: dict) -> str:
             f"decode={ph['decode_s'] * 1e3:.1f}ms/{ph['decode_n']}")
 
 
+def zipf_router_bias(n_experts: int, alpha: float,
+                     scale: float = 1.5) -> jax.Array:
+    """A (E,) additive router-logit bias that skews expert selection
+    toward low-index experts following a zipf(alpha) popularity curve —
+    the controlled stand-in for the real-traffic routing skew the
+    paper's §6 load balancer absorbs.  ``scale`` trades skew strength
+    against the per-token logit noise (bias is centered log-popularity,
+    so scale ~ a few logit standard deviations gives a heavy but not
+    degenerate skew)."""
+    ranks = np.arange(1, n_experts + 1, dtype=np.float64)
+    p = ranks ** -alpha
+    p /= p.sum()
+    bias = np.log(p)
+    bias = (bias - bias.mean()) * scale / max(1e-9, bias.std())
+    return jnp.asarray(bias, jnp.float32)
+
+
+def _inject_router_bias(params: dict, cfg, bias: jax.Array) -> dict:
+    """Attach a router-logit bias to every MoE layer in-place (the
+    serving paths read the optional ``router_bias`` key next to
+    ``router``)."""
+    n = 0
+    for pos, _kind in enumerate(cfg.block_pattern):
+        lp = params["blocks"][pos]
+        if "router" in lp:
+            lp["router_bias"] = jnp.broadcast_to(bias,
+                                                 (cfg.n_blocks,) + bias.shape)
+            n += 1
+    for pos, _kind in enumerate(cfg.remainder_pattern):
+        lp = params["remainder"][pos]
+        if "router" in lp:
+            lp["router_bias"] = bias
+            n += 1
+    if not n:
+        raise ValueError(f"{cfg.name} has no MoE router to bias")
+    return params
+
+
 def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
         n_requests: int = 8, max_new: int = 8, max_batch: int = 4,
         max_seq: int = 128, microbatches: int | str = 3, use_m2n: bool = False,
         prefill_devices: int = 0, transfer: str = "async",
         prefill_chunk_tokens: int = 512, profile_stages: bool = False,
+        expert_rebalance_every: int = 0, expert_replication: bool = True,
+        zipf_route_bias: float = 0.0,
         temperature: float = 0.0, prompt_len: int = 0,
         warmup_requests: int = 0, seed: int = 0, verbose: bool = True):
     """``prompt_len`` > 0 pins every request's prompt length (one prefill
@@ -58,13 +99,25 @@ def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
     that many throwaway requests through the engine first, so jit/eager
     compiles (per fresh runtime instance — the m2n shard_map alone costs
     seconds) never land in the measured wall time; reported tokens /
-    decode_iters / prefills and tok/s cover the measured batch only."""
+    decode_iters / prefills and tok/s cover the measured batch only.
+
+    ``expert_rebalance_every`` > 0 re-solves expert placement from live
+    routing counts every N decode iterations (replicating hot experts
+    unless ``expert_replication=False``); ``zipf_route_bias`` > 0
+    injects a zipf(alpha) router-logit bias — the skewed-routing
+    scenario the rebalancer exists to absorb."""
     if runtime not in RUNTIMES:
         raise ValueError(f"runtime must be one of {RUNTIMES}, got {runtime!r}")
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg)
     params = init_params(cfg, jax.random.PRNGKey(seed))
+    if zipf_route_bias > 0.0:
+        if cfg.moe is None:
+            raise ValueError("--zipf-route-bias needs an MoE arch")
+        params = _inject_router_bias(
+            params, cfg, zipf_router_bias(cfg.moe.n_experts,
+                                          zipf_route_bias))
 
     # cluster topology: prefill group (optional) vs decode group; the
     # decode group is further split attention/expert by the runtime
@@ -91,9 +144,17 @@ def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
             if verbose:
                 print(f"auto-selected m={m} micro-batches")
     if runtime == "disagg":
-        engine_kw["decode_fn"] = inst.decode_step
+        # runtime handle rides along so live expert rebalancing (and the
+        # imbalance report in stats()) work without the pingpong engine
+        engine_kw.update(decode_fn=inst.decode_step, runtime=inst)
     elif runtime == "pingpong":
         engine_kw.update(mode="pingpong", runtime=inst)
+    if expert_rebalance_every:
+        if inst is None:
+            raise ValueError("--expert-rebalance-every needs "
+                             "--runtime disagg|pingpong")
+        engine_kw.update(expert_rebalance_every=expert_rebalance_every,
+                         expert_replication=expert_replication)
 
     if prefill_devs:
         engine_kw.update(
@@ -135,6 +196,9 @@ def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
               "transfer_s", "transfer_n", "decode_s", "decode_n"):
         if k in stats["phases"]:
             stats["phases"][k] -= pre["phases"].get(k, 0)
+    for k in ("rebalances", "placement_updates", "rebalance_s"):
+        if k in stats:
+            stats[k] -= pre.get(k, 0)
     stats["wall_s"] = dt
     stats["decode_tok_per_s"] = stats["tokens"] / dt
     if verbose:
@@ -147,6 +211,12 @@ def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
         print(_format_phases(stats["phases"]))
         if "stages" in stats:
             print(_format_stages(stats["stages"]))
+        if "imbalance" in stats:
+            costs = " ".join(f"{c:.0f}" for c in stats["expert_node_cost"])
+            print(f"experts: imbalance={stats['imbalance']:.2f} "
+                  f"node-cost=[{costs}] "
+                  f"rebalances={stats['rebalances']} "
+                  f"replicated={stats['replicated_experts']}")
     return stats
 
 
@@ -183,6 +253,20 @@ def main():
     ap.add_argument("--profile-stages", action="store_true",
                     help="block per stage for device-accurate timings "
                          "(serialises the pipeline)")
+    ap.add_argument("--expert-rebalance-every", type=int, default=0,
+                    help="re-solve expert placement from live routing "
+                         "counts every N decode iterations (0 = static "
+                         "contiguous placement; needs --runtime "
+                         "disagg|pingpong)")
+    ap.add_argument("--expert-replication",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="allow hot experts to be replicated across "
+                         "expert nodes when rebalancing (paper §6 "
+                         "on-device redundancy)")
+    ap.add_argument("--zipf-route-bias", type=float, default=0.0,
+                    help="inject a zipf(alpha) router-logit bias to "
+                         "skew expert traffic (benchmark scenario for "
+                         "the load balancer; 0 = off)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
     if args.arch is None and not args.reduced:
@@ -197,7 +281,11 @@ def main():
         microbatches=mb, use_m2n=args.use_m2n,
         prefill_devices=args.prefill_devices, transfer=args.transfer,
         prefill_chunk_tokens=args.prefill_chunk_tokens,
-        profile_stages=args.profile_stages, temperature=args.temperature)
+        profile_stages=args.profile_stages,
+        expert_rebalance_every=args.expert_rebalance_every,
+        expert_replication=args.expert_replication,
+        zipf_route_bias=args.zipf_route_bias,
+        temperature=args.temperature)
 
 
 if __name__ == "__main__":

@@ -31,13 +31,70 @@ class Routing(NamedTuple):
     probs: jax.Array        # (T, E) full router probabilities (f32)
 
 
-def route(x: jax.Array, w_router: jax.Array, top_k: int) -> Routing:
-    """Top-k softmax routing.  x: (T, d), w_router: (d, E)."""
+def route(x: jax.Array, w_router: jax.Array, top_k: int,
+          bias: jax.Array | None = None) -> Routing:
+    """Top-k softmax routing.  x: (T, d), w_router: (d, E).
+
+    bias: optional (E,) additive logit bias (DeepSeek-style router bias;
+    also how the serving benchmarks induce a controlled routing skew).
+    """
     logits = x.astype(jnp.float32) @ w_router.astype(jnp.float32)
+    if bias is not None:
+        logits = logits + bias.astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     gates, experts = jax.lax.top_k(probs, top_k)
     gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
     return Routing(gates, experts.astype(jnp.int32), probs)
+
+
+def routing_counts(routing: Routing, n_experts: int,
+                   weights: jax.Array | None = None) -> jax.Array:
+    """Per-expert routed-token counts for one flat batch: (E,) f32.
+
+    The serving runtime accumulates these across decode steps — the
+    live traffic trace ``core.load_balance.balance_experts`` re-solves
+    placement over (paper §6).  ``weights``: optional (T,) per-token
+    weight — the engine passes its active-slot mask so idle KV rows
+    (decoded every iteration but serving no request) never pollute the
+    trace."""
+    one_hot = jax.nn.one_hot(routing.experts, n_experts, dtype=jnp.float32)
+    if weights is not None:
+        one_hot = one_hot * weights.astype(jnp.float32)[:, None, None]
+    return jnp.sum(one_hot, axis=(0, 1))
+
+
+def _token_hash01(tok_ids: jax.Array) -> jax.Array:
+    """Deterministic hash of token index -> [0, 1) f32 (splitmix-style).
+
+    Replica choice must be a pure function of the token's position so a
+    rebalanced runtime stays token-identical to the static one."""
+    h = tok_ids.astype(jnp.uint32) * jnp.uint32(2654435761)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(2246822519)
+    h = h ^ (h >> 13)
+    return h.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+
+
+def replica_assign(experts: jax.Array, rep_node: jax.Array,
+                   rep_slot: jax.Array, rep_cum: jax.Array,
+                   slots_per_node: int):
+    """Map (T, K) expert ids to virtual expert slots under a replicated
+    placement (``core.load_balance.PlacementTables``).
+
+    Token t's share of a replicated expert is split deterministically by
+    hash of the token index against the replica's cumulative traffic
+    fractions.  Returns (vslot (T,K) int32 in [0, N*S), node (T,K)
+    int32) — every (token, k) pair lands on exactly one replica, so the
+    combined output is identical to the unreplicated dispatch.
+    """
+    T, _ = experts.shape
+    u = _token_hash01(jnp.arange(T, dtype=jnp.int32))          # (T,)
+    cum = rep_cum[experts]                                      # (T,K,R)
+    r = jnp.sum(u[:, None, None] >= cum, axis=-1).astype(jnp.int32)
+    r = jnp.minimum(r, rep_cum.shape[-1] - 1)
+    node = jnp.take_along_axis(rep_node[experts], r[..., None], -1)[..., 0]
+    slot = jnp.take_along_axis(rep_slot[experts], r[..., None], -1)[..., 0]
+    return node * slots_per_node + slot, node
 
 
 def load_balance_loss(routing: Routing, n_experts: int) -> jax.Array:
@@ -110,7 +167,8 @@ def routed_experts_dense(params: dict, x: jax.Array, cfg: MoEConfig, act: str,
                          capacity_mode: str):
     """Baseline routed-expert computation (monolithic scatter/gather)."""
     T, d = x.shape
-    routing = route(x, params["router"], cfg.top_k)
+    routing = route(x, params["router"], cfg.top_k,
+                    params.get("router_bias"))
     aux = load_balance_loss(routing, cfg.n_experts)
     C = expert_capacity(T, cfg, capacity_mode)
     idx_buf, gate_buf = dispatch_indices(routing, cfg.n_experts, C)

@@ -29,13 +29,16 @@ token-for-token identical to the inline-prefill engine.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
+from repro.core.load_balance import balance_experts, evaluate_placement
 from repro.models import decode_step, init_cache, prefill
 from repro.models.stubs import extra_inputs
 from repro.serving.kvcache import (MicrobatchSlotAllocator, SlotAllocator,
@@ -76,7 +79,10 @@ class Engine:
                  mode: str = "monolithic", runtime=None,
                  n_microbatches: Optional[int] = None,
                  prefill_worker=None, transfer: str = "async",
-                 kv_sharding=None, seed: int = 0):
+                 kv_sharding=None, seed: int = 0,
+                 expert_rebalance_every: int = 0,
+                 expert_replication: bool = True,
+                 expert_window: int = 8):
         """mode "monolithic": decode via ``decode_fn`` (default: batched
         ``models.decode_step``; pass ``runtime.decode_step`` for the
         disaggregated path without engine-level micro-batching).
@@ -94,7 +100,18 @@ class Engine:
         decode cache lives — pass the runtime's ``kv_sharding`` to pin
         rows to the attention group).  ``transfer`` is "async" (the
         copy overlaps in-flight decode via JAX async dispatch) or
-        "sync" (block on each migrated row before admission)."""
+        "sync" (block on each migrated row before admission).
+
+        ``expert_rebalance_every`` > 0 turns on live expert
+        load-balanced placement (paper §6): every that many decode
+        iterations the engine drains the runtime's per-expert routing
+        counts, re-solves ``core.load_balance.balance_experts`` over a
+        sliding window of the last ``expert_window`` intervals, and
+        applies the placement (hot experts replicated across expert
+        nodes when ``expert_replication``) to the runtime.  Token
+        routing across replicas is deterministic (token-index hash), so
+        rebalanced serving stays token-identical under greedy
+        sampling."""
         if mode not in ("monolithic", "pingpong"):
             raise ValueError(f"unknown engine mode {mode!r}")
         if transfer not in ("sync", "async"):
@@ -107,6 +124,18 @@ class Engine:
             if decode_fn is not None:
                 raise ValueError("pingpong mode drives the runtime directly;"
                                  " decode_fn is not used")
+        if expert_rebalance_every:
+            if runtime is None or not hasattr(runtime, "apply_placement"):
+                raise ValueError("expert_rebalance_every needs a runtime "
+                                 "with live placement support "
+                                 "(core.disagg.DisaggregatedInstance)")
+            if cfg.moe is None:
+                raise ValueError("expert rebalancing needs an MoE config")
+            if getattr(runtime.plan, "capacity_mode", "full") != "full":
+                # fail at construction, not mid-serve at the first
+                # rebalance (apply_placement enforces the same invariant)
+                raise ValueError("expert rebalancing requires the runtime "
+                                 "plan's capacity_mode='full' (drop-free)")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -141,6 +170,15 @@ class Engine:
         self.t_transfer = 0.0
         self.t_decode = 0.0
         self.n_transfers = 0
+        # live expert load balancing (paper §6)
+        self.expert_rebalance_every = expert_rebalance_every
+        self.expert_replication = expert_replication
+        self._load_window: deque = deque(maxlen=max(1, expert_window))
+        self.n_rebalances = 0
+        self.n_placement_updates = 0
+        self.t_rebalance = 0.0
+        self._track_experts = (cfg.moe is not None and runtime is not None
+                               and hasattr(runtime, "set_active_slots"))
 
     # ------------------------------------------------------------- frontend
     def submit(self, req: Request):
@@ -209,6 +247,20 @@ class Engine:
             self.n_transfers += 1
             self._start_request(req, slot, res.last_logits)
 
+    def _rebalance(self):
+        """Drain one interval of live routing counts, re-solve placement
+        over the sliding window, and apply it to the runtime (§6)."""
+        t0 = time.perf_counter()
+        self._load_window.append(self.runtime.take_expert_counts())
+        loads = np.sum(self._load_window, axis=0)
+        placement = balance_experts(
+            loads, self.runtime.n_expert_nodes,
+            allow_replication=self.expert_replication)
+        if self.runtime.apply_placement(placement):
+            self.n_placement_updates += 1
+        self.n_rebalances += 1
+        self.t_rebalance += time.perf_counter() - t0
+
     def _retire(self):
         for rid in [r for r, q in self.running.items() if q.done]:
             req = self.running.pop(rid)
@@ -235,6 +287,12 @@ class Engine:
         pos = jnp.zeros((self.max_batch,), jnp.int32)
         for req in self.running.values():
             pos = pos.at[req.slot].set(req.position - 1)
+        if self._track_experts:
+            # only live rows feed the routing-count traffic trace
+            active = np.zeros((self.max_batch,), np.float32)
+            for req in self.running.values():
+                active[req.slot] = 1.0
+            self.runtime.set_active_slots(active)
         t0 = time.perf_counter()
         if self.mode == "pingpong":
             logits, self.cache = self.runtime.decode_microbatched(
@@ -249,6 +307,9 @@ class Engine:
             req.generated.append(tok)
             self._last_token[req.slot] = tok
         self.n_decode_iters += 1
+        if (self.expert_rebalance_every
+                and self.n_decode_iters % self.expert_rebalance_every == 0):
+            self._rebalance()
         n_active = len(self.running)
         self._retire()
         return n_active
@@ -296,4 +357,22 @@ class Engine:
         if self.mode == "pingpong":
             out["n_microbatches"] = len(self.mb_slices)
             out["stages"] = self.runtime.stage_report()
+        if (self.cfg.moe is not None and self.runtime is not None
+                and hasattr(self.runtime, "placement_fractions")):
+            # live expert-balance report: the placement the runtime is
+            # serving right now, priced on the latest traffic window
+            # (counts drained at rebalances plus the not-yet-drained
+            # remainder — also covers the never-rebalanced static case)
+            loads = (np.sum(self._load_window, axis=0)
+                     if self._load_window else 0.0)
+            loads = loads + self.runtime.peek_expert_counts()
+            pl = evaluate_placement(self.runtime.placement_fractions, loads)
+            out["imbalance"] = pl.imbalance
+            out["expert_node_cost"] = pl.node_cost.tolist()
+            out["expert_loads"] = loads.tolist()
+            out["rebalances"] = self.n_rebalances
+            out["placement_updates"] = self.n_placement_updates
+            out["rebalance_s"] = self.t_rebalance
+            n_replicas = (self.runtime.placement_fractions > 1e-9).sum(axis=1)
+            out["replicated_experts"] = int((n_replicas > 1).sum())
         return out

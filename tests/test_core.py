@@ -130,6 +130,61 @@ class TestLoadBalance:
         base = load_balance.balance_experts(loads, 4, allow_replication=False)
         assert pl.max_cost < base.max_cost
 
+    def test_zero_traffic_loads(self):
+        # a cold start (no routed tokens yet) must still produce a valid
+        # placement: every expert priced at the cold floor, spread evenly
+        pl = load_balance.balance_experts([0.0] * 8, 4)
+        np.testing.assert_allclose(pl.fractions.sum(axis=1), 1.0, atol=1e-9)
+        np.testing.assert_allclose(pl.node_cost, 2.0)  # 2 experts x floor
+        assert pl.imbalance == pytest.approx(1.0)
+
+    def test_more_nodes_than_experts(self):
+        loads = [5.0, 3.0, 2.0]
+        pl = load_balance.balance_experts(loads, 8,
+                                          allow_replication=False)
+        np.testing.assert_allclose(pl.fractions.sum(axis=1), 1.0, atol=1e-9)
+        # each expert gets its own node; the rest stay empty
+        assert (pl.node_cost > 0).sum() == 3
+        assert pl.max_cost == pytest.approx(5.0)
+        # with replication the hot expert can spread below max(loads)
+        repl = load_balance.balance_experts(loads, 8)
+        assert repl.max_cost <= pl.max_cost + 1e-9
+
+    @given(st.lists(st.floats(0.0, 100.0), min_size=4, max_size=48),
+           st.integers(2, 8))
+    @settings(max_examples=60, deadline=None)
+    def test_no_replication_packs_whole_experts(self, loads, n):
+        pl = load_balance.balance_experts(loads, n,
+                                          allow_replication=False)
+        # every row is one-hot: experts are never split without
+        # replication
+        assert ((pl.fractions == 0) | (pl.fractions == 1)).all()
+        np.testing.assert_allclose(pl.fractions.sum(axis=1), 1.0)
+        np.testing.assert_allclose(
+            pl.node_cost, pl.fractions.T @ np.maximum(loads, 1.0))
+
+    @given(st.integers(4, 32), st.integers(2, 8), st.integers(2, 6))
+    @settings(max_examples=40, deadline=None)
+    def test_imbalance_monotone_under_growing_skew(self, m, n, steps):
+        # mix uniform traffic toward a point mass on expert 0: the static
+        # contiguous placement's imbalance must grow monotonically with
+        # the skew, and the solved placement must never be worse
+        total = 100.0 * m
+        uniform = np.full(m, total / m)
+        point = np.zeros(m)
+        point[0] = total
+        prev = None
+        for k in range(steps + 1):
+            t = k / steps
+            loads = (1 - t) * uniform + t * point
+            static = load_balance.evaluate_placement(
+                load_balance.static_placement(m, n).fractions, loads)
+            if prev is not None:
+                assert static.imbalance >= prev - 1e-9
+            prev = static.imbalance
+            solved = load_balance.balance_experts(loads, n)
+            assert solved.imbalance <= static.imbalance + 1e-9
+
 
 # -------------------------------------------------------------------- M2N
 class TestM2N:
