@@ -15,28 +15,35 @@ can measure:
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from benchmarks.common import emit, timeit
+from repro.core.transport import RdmaCostModel, SimRdmaTransport
 from repro.kernels import ops, ref
 
-# alpha constants (s) — NCCL per-op costs from §5: GPU->CPU proxy copy,
-# group-op setup (batched by 8), launch + verification per send, GPU sync.
-NCCL_ALPHA = 40e-6        # group setup + GPU sync per op batch
-NCCL_PER_OP = 15e-6       # per-send proxy copy + launch + checks
-NCCL_GROUP = 8            # NCCL batches P2P group ops by 8
-M2N_ALPHA = 6e-6          # one-time: poll CQ, no staging
-M2N_PER_OP = 1e-6         # RDMA write-with-immediate issue
-NET_BW = 25e9             # 200 Gbps NIC
+# the two §5 network models — constants live with the transport layer
+# (core.transport.RdmaCostModel), not in this benchmark
+NCCL_MODEL = RdmaCostModel.nccl_grouped_p2p()
+M2N_MODEL = RdmaCostModel.m2n_rdma()
+NCCL_GROUP = NCCL_MODEL.group
 
 
 def nccl_one_to_n(size_bytes: int, n: int) -> float:
-    batches = -(-n // NCCL_GROUP)
-    return (batches * NCCL_ALPHA + n * NCCL_PER_OP
-            + n * size_bytes / NET_BW)
+    return NCCL_MODEL.one_to_n(size_bytes, n)
 
 
 def m2n_one_to_n(size_bytes: int, n: int) -> float:
-    return M2N_ALPHA + n * M2N_PER_OP + n * size_bytes / NET_BW
+    return M2N_MODEL.one_to_n(size_bytes, n)
+
+
+def sim_hop(model: RdmaCostModel, size_bytes: int, n: int) -> float:
+    """Latency of one 1->N hop of ``size_bytes`` per peer, read off a
+    ``SimRdmaTransport`` handle — the exact accounting a serving run
+    with ``--transport simrdma`` accrues per hop, so the figure numbers
+    come from the transport layer rather than a local formula."""
+    tr = SimRdmaTransport(model)
+    payload = np.zeros(size_bytes, np.uint8)
+    return tr.send_tokens(payload, None, fanout=n).sim_s
 
 
 def run():
@@ -44,8 +51,8 @@ def run():
     rows = []
     for kb in (16, 64, 128, 256, 512, 1024):
         s = kb * 1024
-        t_nccl = nccl_one_to_n(s, n)
-        t_m2n = m2n_one_to_n(s, n)
+        t_nccl = sim_hop(NCCL_MODEL, s, n)
+        t_m2n = sim_hop(M2N_MODEL, s, n)
         rows.append((kb, t_nccl * 1e6, t_m2n * 1e6))
     r256 = next(r for r in rows if r[0] == 256)
     lat_red = 1 - r256[2] / r256[1]

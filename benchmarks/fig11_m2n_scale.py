@@ -10,19 +10,20 @@ M2N MoE moves exactly T*d bytes per hop regardless of N."""
 from __future__ import annotations
 
 from benchmarks.common import emit
-from benchmarks.fig10_m2n import NCCL_GROUP, m2n_one_to_n, nccl_one_to_n
+from benchmarks.fig10_m2n import (M2N_MODEL, NCCL_MODEL, m2n_one_to_n,
+                                  nccl_one_to_n)
 from repro.core.m2n import m2n_traffic_bytes
 
-JITTER_P99 = 120e-6  # per group-batch sync jitter at P99 (calibrated)
+# tail terms (per-batch P99 jitter, M2N tail floor) live with the models
+# in core.transport.RdmaCostModel
 
 
 def nccl_p99(size_bytes: int, n: int) -> float:
-    batches = -(-n // NCCL_GROUP)
-    return nccl_one_to_n(size_bytes, n) + batches * JITTER_P99
+    return NCCL_MODEL.p99_one_to_n(size_bytes, n)
 
 
 def m2n_p99(size_bytes: int, n: int) -> float:
-    return m2n_one_to_n(size_bytes, n) + 8e-6
+    return M2N_MODEL.p99_one_to_n(size_bytes, n)
 
 
 def run():

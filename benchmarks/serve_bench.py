@@ -27,12 +27,18 @@ import sys
 
 from benchmarks.common import emit
 from repro.launch.serve import run as serve_run
+from repro.serving.stats import STATS_SCHEMA_VERSION
 
 CONFIGS = (
     ("monolithic", {}),
     ("disagg", {}),
     ("pingpong", {}),
     ("pingpong_m2n", {"use_m2n": True}),
+    # every hop priced by the simulated-RDMA transport backend: the
+    # recorded per-hop bytes + modeled latency land in the entry's
+    # "transport" section (tok/s still gates the real in-process speed
+    # — the sim only accounts, it does not sleep)
+    ("pingpong_simrdma", {"use_m2n": True, "transport": "simrdma"}),
     # the PR-2 tentpole: prefill on its own cluster, KV rows migrated
     # into the decode cache at admission (async transfer)
     ("pingpong_disagg_prefill", {"prefill_devices": 1, "transfer": "async"}),
@@ -75,6 +81,10 @@ def _entry(best: dict, runs: list) -> dict:
     if "stages" in best:
         entry["stages"] = {k: v for k, v in best["stages"].items()
                            if k in ("t_a", "t_e", "t_c")}
+    if "transport" in best:
+        # per-hop wire accounting from the run's transport backend
+        # (kinds: tokens / kv / weights / collective)
+        entry["transport"] = best["transport"]
     return entry
 
 
@@ -151,8 +161,10 @@ def _describe_baseline(baseline: dict, name: str) -> str:
     wl = baseline.get("workload", {})
     machine = {k: wl[k] for k in ("device", "arch") if k in wl}
     entry_keys = sorted(baseline["results"].get(name, {}))
-    return (f"baseline recorded on {machine or 'unknown machine class'}; "
-            f"{name!r} entry keys: {entry_keys}")
+    base_ver = baseline.get("stats_schema_version", 1)
+    return (f"baseline recorded on {machine or 'unknown machine class'} "
+            f"with stats schema v{base_ver} (code is "
+            f"v{STATS_SCHEMA_VERSION}); {name!r} entry keys: {entry_keys}")
 
 
 def check(fresh: dict, baseline: dict, tolerance: float = 0.15) -> list:
@@ -283,6 +295,10 @@ def main():
     if args.out:
         payload = {
             "benchmark": "serve_bench",
+            # version of Engine.stats() these entries were derived from
+            # (serving.stats.STATS_SCHEMA_VERSION) — --check prints both
+            # versions when diagnosing baseline schema drift
+            "stats_schema_version": STATS_SCHEMA_VERSION,
             "workload": {"arch": "mixtral-8x22b", "device": "cpu",
                          **{k: v for k, v in WORKLOAD.items()
                             if k != "verbose"}},

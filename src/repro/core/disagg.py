@@ -50,6 +50,7 @@ from repro.config import ModelConfig
 from repro.core import load_balance as lb_lib
 from repro.core import m2n as m2n_lib
 from repro.core import pingpong
+from repro.core import transport as transport_lib
 from repro.models import moe as moe_lib
 from repro.models.common import rms_norm
 from repro.models.ffn import gated_ffn
@@ -112,15 +113,24 @@ class DisaggregatedInstance:
                  attn_devices: Optional[Sequence] = None,
                  expert_devices: Optional[Sequence] = None,
                  plan: Optional[DisaggPlan] = None,
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 transport=None):
         """``devices``: the decode cluster's device pool (default: all
         local devices), split half attention / half expert unless
         ``attn_devices``/``expert_devices`` pin the groups explicitly.
         Serving launchers pass the pool left over after reserving the
-        prefill cluster."""
+        prefill cluster.
+
+        ``transport``: the ``core.transport.Transport`` every token/KV/
+        weight hop goes through (M2N dispatch, N2M return, live-placement
+        weight regathers) — default a private ``InProcessTransport``.
+        The serving engine reuses this instance so one stats ledger
+        covers the whole serving path."""
         # plans are mutated in place (auto-m, profile toggling), so each
         # instance must own its own default rather than share one
         plan = plan if plan is not None else DisaggPlan()
+        self.transport = (transport if transport is not None
+                          else transport_lib.InProcessTransport())
         for kind in cfg.block_pattern + cfg.remainder_pattern:
             if kind not in ("attn", "local"):
                 raise NotImplementedError(
@@ -356,6 +366,32 @@ class DisaggregatedInstance:
         self._expert_sharding = ein
         self._attn_rep = NamedSharding(self.attn_mesh, P())
 
+    # ------------------------------------------------------------ transport
+    def _send_m2n(self, payload):
+        """M2N dispatch hop onto the expert group.  Baseline path:
+        (E, C, d) capacity buffers scattered expert-major (wire bytes =
+        payload); m2n path: raw (T, d) activations replicated to every
+        expert node (wire bytes = payload x N)."""
+        fanout = (self.n_expert_nodes
+                  if self.cfg.moe is not None and self.plan.use_m2n else 1)
+        return self.transport.send_tokens(payload, self._expert_sharding,
+                                          fanout=fanout).data
+
+    def _send_n2m(self, out):
+        """N2M return hop back onto the attention group."""
+        return self.transport.send_tokens(out, self._attn_rep).data
+
+    def _account_combine(self, t_tokens: int, d_model: int, itemsize: int):
+        """Account the combine psum inside the m2n shard_map — the only
+        wire traffic of that dispatch scheme.  It executes inside jit,
+        so its analytically known bytes go through the transport's
+        collective side-channel (reduce-scatter + all-gather over the
+        expert axis: 2 * T * d * (N-1)/N)."""
+        n = self.n_expert_nodes
+        if n > 1:
+            nbytes = 2 * t_tokens * d_model * itemsize * (n - 1) // n
+            self.transport.record_collective(nbytes, fanout=n)
+
     # ----------------------------------------------- live expert placement
     def apply_placement(self, placement: lb_lib.Placement):
         """Install a (possibly replicated) expert placement in the live
@@ -396,10 +432,13 @@ class DisaggregatedInstance:
         flat = tables.slot_experts.reshape(-1)
         gather = jnp.asarray(np.where(flat < 0, 0, flat), jnp.int32)
         ep_shard = NamedSharding(self.expert_mesh, P("ep"))
-        self.layers_expert_placed = [
-            {k: jax.device_put(raw[k][gather], ep_shard)
-             for k in EXPERT_KEYS}
-            for raw in self._moe_raw]
+        # the node-major (N*S, ...) weight regather is a transport hop
+        # (every MoE layer's virtual-slot copies uploaded in one send) —
+        # per-hop bytes/latency land under the "weights" kind
+        self.layers_expert_placed = self.transport.regather_weights(
+            [{k: raw[k][gather] for k in EXPERT_KEYS}
+             for raw in self._moe_raw],
+            ep_shard).data
         tbl = {"rep_node": jnp.asarray(tables.rep_node),
                "rep_slot": jnp.asarray(tables.rep_slot),
                "rep_cum": jnp.asarray(tables.rep_cum)}
@@ -592,7 +631,7 @@ class DisaggregatedInstance:
             def drain_one():
                 i, x, h, out, disp = inflight.popleft()
                 out_back = self._timed(                        # N2M return
-                    "n2m", jax.device_put, out, self._attn_rep)
+                    "n2m", self._send_n2m, out)
                 if cfg.moe is not None and self.plan.use_m2n:
                     xs[i] = self._timed("combine", self._combine_m2n,
                                         pa, x, h, out_back)
@@ -622,8 +661,7 @@ class DisaggregatedInstance:
                 # M2N dispatch hop: routed capacity buffers in the
                 # baseline path, raw (T, d) activations in the m2n path
                 payload = h if disp is None else disp["xe"]
-                buf = self._timed("m2n", jax.device_put, payload,
-                                  self._expert_sharding)
+                buf = self._timed("m2n", self._send_m2n, payload)
                 if cfg.moe is not None and self.plan.use_m2n:
                     if placed:
                         out, cnt = self._timed(
@@ -635,6 +673,8 @@ class DisaggregatedInstance:
                             "expert", self._expert_phase, pe,
                             self.layers_router_ep[l], buf, acts[i])
                     self._counts_ep = self._counts_ep + cnt
+                    self._account_combine(payload.shape[0], payload.shape[1],
+                                          payload.dtype.itemsize)
                 else:
                     out = self._timed("expert", self._expert_phase, pe, buf)
                 trace.append(("expert", i, l))

@@ -57,7 +57,8 @@ def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
                            weights_2d: bool = False,
                            tables: Optional[dict] = None,
                            with_counts: bool = False,
-                           count_weights: Optional[jax.Array] = None):
+                           count_weights: Optional[jax.Array] = None,
+                           transport=None):
     """M2N routed-experts computation under shard_map.
 
     x: (T, d) sharded over ``data_axes``; expert weights sharded over
@@ -73,6 +74,13 @@ def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
     all-gathers the tokens over the data axes, computes its (expert
     slice x d_ff slice) of the MLP, and the f-partial products are
     psum'd over the data axes.  Intended for decode-sized batches.
+
+    transport: optional ``core.transport.Transport`` — the combine psum
+    (this dispatch's only wire traffic) is accounted on it as a
+    "collective" hop with its analytic byte count.  Accounting happens
+    when this function executes Python-side; under an enclosing ``jit``
+    that is trace time, so jitted serving paths account the hop at the
+    runtime level instead (``core.disagg`` does).
 
     tables: executable expert placement (jax arrays mirroring
     ``core.load_balance.PlacementTables``: rep_node/rep_slot/rep_cum
@@ -184,19 +192,30 @@ def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
         out_specs=out_specs,
         **_SHARD_MAP_KWARGS,
     )
+    if transport is not None and n_shards > 1:
+        itemsize = jnp.dtype(x.dtype).itemsize
+        transport.record_collective(
+            m2n_traffic_bytes(x.shape[0], x.shape[1], cfg.top_k, E,
+                              n_shards, itemsize)["m2n"],
+            fanout=n_shards)
     return fn(x, router_w, bias, count_weights, we1, we3, we2, *tbl_args)
 
 
 @contextlib.contextmanager
 def use_m2n(mesh: jax.sharding.Mesh, data_axes: Sequence[str] = ("data",),
-            expert_axis: str = "model", weights_2d: bool = False):
-    """Context manager: route every MoE layer through the M2N dispatch."""
+            expert_axis: str = "model", weights_2d: bool = False,
+            transport=None):
+    """Context manager: route every MoE layer through the M2N dispatch.
+
+    ``transport`` threads a ``core.transport.Transport`` into every
+    dispatch for combine-traffic accounting (see
+    ``sharded_routed_experts`` for the jit caveat)."""
 
     def impl(params, x, cfg, act, capacity_mode):
         return sharded_routed_experts(
             params, x, cfg, act, capacity_mode, mesh=mesh,
             data_axes=data_axes, expert_axis=expert_axis,
-            weights_2d=weights_2d)
+            weights_2d=weights_2d, transport=transport)
 
     prev = moe_lib.set_routed_impl(impl)
     try:

@@ -1,0 +1,170 @@
+"""Two-process ``jax.distributed`` transport smoke: the M2N parity
+suite run through ``MultiControllerTransport``.
+
+The parent spawns N worker processes (each with K forced host CPU
+devices), hands them coordinator/rank via the ``REPRO_*`` env vars, and
+checks every worker exits cleanly.  Each worker
+
+  1. brings up ``MultiControllerTransport`` (``jax.distributed`` with
+     gloo CPU collectives) and builds the global "ep" mesh over all
+     N*K devices;
+  2. uploads replicated token activations and ep-sharded expert weights
+     through ``transport.send`` (the weights hop passes each process's
+     host-local slice — the multihost convention);
+  3. runs the ``core.m2n.sharded_routed_experts`` dispatch over the
+     global mesh — the combine psum is real cross-process wire traffic —
+     and checks the gathered output token-identical (within fp32
+     tolerance) against the single-host dense oracle;
+  4. pushes a KV-migration hop through the transport and asserts the
+     per-kind stats ledger recorded every hop.
+
+Usage (also wired as a CI job — see .github/workflows/ci.yml):
+
+  PYTHONPATH=src python -m repro.launch.dist_smoke --procs 2 \
+      --local-devices 2
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import subprocess
+import sys
+
+ENV_COORD = "REPRO_COORDINATOR"
+ENV_NPROC = "REPRO_NUM_PROCESSES"
+ENV_PID = "REPRO_PROCESS_ID"
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+# --------------------------------------------------------------- worker
+def worker(local_devices: int) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.config import MoEConfig
+    from repro.core.m2n import sharded_routed_experts
+    from repro.core.transport import MultiControllerTransport
+    from repro.models import moe as moe_lib
+
+    transport = MultiControllerTransport()
+    nproc = transport.process_count
+    pid = transport.process_index
+    n_dev = jax.device_count()
+    assert jax.local_device_count() == local_devices, \
+        (jax.local_device_count(), local_devices)
+    assert n_dev == nproc * local_devices, (n_dev, nproc, local_devices)
+    mesh = transport.global_mesh("ep")
+    P = jax.sharding.PartitionSpec
+    NamedSharding = jax.sharding.NamedSharding
+
+    # -- a small MoE every process can hold fully (the oracle needs it)
+    E, d, f, T, K = 2 * n_dev, 16, 32, 16, 2
+    cfg = MoEConfig(n_experts=E, top_k=K, d_ff_expert=f)
+    rng = np.random.RandomState(0)  # same params on every process
+    params = {
+        "router": rng.randn(d, E).astype(np.float32),
+        "we1": rng.randn(E, d, f).astype(np.float32) / np.sqrt(d),
+        "we3": rng.randn(E, d, f).astype(np.float32) / np.sqrt(d),
+        "we2": rng.randn(E, f, d).astype(np.float32) / np.sqrt(f),
+    }
+    x = rng.randn(T, d).astype(np.float32)
+
+    # single-host dense oracle (no transport, no mesh)
+    y_ref, _aux = moe_lib.routed_experts_dense(
+        {k: jnp.asarray(v) for k, v in params.items()},
+        jnp.asarray(x), cfg, "silu", "full")
+    y_ref = np.asarray(y_ref)
+
+    # -- upload through the transport: tokens replicated, weights
+    #    ep-sharded (each process sends its host-local expert slice)
+    rep = NamedSharding(mesh, P())
+    ep = NamedSharding(mesh, P("ep"))
+    e_loc = E // nproc  # experts owned by this process's devices
+    my = slice(pid * e_loc, (pid + 1) * e_loc)
+    x_g = transport.send_tokens(jnp.asarray(x), rep).data
+    router_g = transport.regather_weights(
+        {"router": jnp.asarray(params["router"])}, rep).data
+    w_g = transport.regather_weights(
+        {k: jnp.asarray(params[k][my]) for k in ("we1", "we3", "we2")},
+        ep).data
+
+    # -- the M2N dispatch over the global mesh: routing replicated on
+    #    every expert shard, combine psum'd over "ep" across processes
+    y, _aux, counts = sharded_routed_experts(
+        dict(w_g, router=router_g["router"]), x_g, cfg, "silu", "full",
+        mesh=mesh, data_axes=(), expert_axis="ep", with_counts=True,
+        transport=transport)
+    y_host = transport.gather(y)
+    counts_host = transport.gather(counts)
+    np.testing.assert_allclose(y_host, y_ref, rtol=2e-5, atol=2e-5)
+    assert counts_host.sum() == T * K, counts_host
+
+    # -- KV hop + ledger checks
+    kv = {"k": jnp.zeros((4, 1, 8, 2)), "v": jnp.zeros((4, 1, 8, 2))}
+    transport.migrate_kv(kv, rep, sync=True).block()
+    st = transport.stats()
+    assert st["backend"] == "multi", st
+    for kind in ("tokens", "kv", "weights", "collective"):
+        assert st[kind]["hops"] >= 1, (kind, st)
+        if kind != "collective":
+            assert st[kind]["bytes"] > 0, (kind, st)
+    print(f"dist-smoke OK p{pid}/{nproc} devices={n_dev} "
+          f"transport={st['backend']}", flush=True)
+
+
+# --------------------------------------------------------------- parent
+def launch(procs: int, local_devices: int, timeout: float = 420.0) -> int:
+    coord = f"127.0.0.1:{_free_port()}"
+    children = []
+    for pid in range(procs):
+        env = dict(
+            os.environ,
+            XLA_FLAGS=f"--xla_force_host_platform_device_count="
+                      f"{local_devices}",
+            JAX_PLATFORMS="cpu",
+            **{ENV_COORD: coord, ENV_NPROC: str(procs),
+               ENV_PID: str(pid)})
+        children.append(subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.dist_smoke", "--child",
+             "--local-devices", str(local_devices)],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True))
+    rc = 0
+    for pid, ch in enumerate(children):
+        try:
+            out, _ = ch.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            ch.kill()
+            out, _ = ch.communicate()
+            out += "\n[parent] TIMEOUT"
+        print(f"--- worker {pid} (exit {ch.returncode}) ---")
+        print(out.strip())
+        rc = rc or ch.returncode or (1 if "TIMEOUT" in out else 0)
+    print("dist-smoke:", "OK" if rc == 0 else f"FAILED (rc={rc})")
+    return rc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--procs", type=int, default=2,
+                    help="number of controller processes to launch")
+    ap.add_argument("--local-devices", type=int, default=2,
+                    help="forced host CPU devices per process")
+    ap.add_argument("--child", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: worker entry
+    args = ap.parse_args()
+    if args.child:
+        worker(args.local_devices)
+        return
+    raise SystemExit(launch(args.procs, args.local_devices))
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,13 +22,12 @@ import numpy as np
 
 from repro.config import get_config, reduced
 from repro.core.disagg import STAGES, DisaggPlan, DisaggregatedInstance
+from repro.core.transport import HOP_KINDS, make_transport
 from repro.launch.mesh import split_serving_devices
 from repro.models import init_params
+from repro.serving.config import RUNTIMES, ServingConfig
 from repro.serving.engine import Engine, Request
 from repro.serving.prefill import PrefillWorker
-from repro.serving.sampler import SamplingParams
-
-RUNTIMES = ("monolithic", "disagg", "pingpong")
 
 
 def _format_stages(report: dict) -> str:
@@ -44,6 +44,18 @@ def _format_phases(ph: dict) -> str:
             f"transfer[{ph['transfer_mode']}]={ph['transfer_s'] * 1e3:.1f}ms/"
             f"{ph['transfer_n']} "
             f"decode={ph['decode_s'] * 1e3:.1f}ms/{ph['decode_n']}")
+
+
+def _format_transport(tr: dict) -> str:
+    parts = []
+    for kind in HOP_KINDS:
+        h = tr.get(kind)
+        if h and h["hops"]:
+            p = f"{kind}={h['bytes'] / 1e6:.2f}MB/{h['hops']}"
+            if h["sim_s"]:
+                p += f"~{h['sim_s'] * 1e3:.1f}ms"
+            parts.append(p)
+    return f"transport[{tr['backend']}]: " + (" ".join(parts) or "no hops")
 
 
 def zipf_router_bias(n_experts: int, alpha: float,
@@ -84,45 +96,61 @@ def _inject_router_bias(params: dict, cfg, bias: jax.Array) -> dict:
     return params
 
 
-def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
-        n_requests: int = 8, max_new: int = 8, max_batch: int = 4,
-        max_seq: int = 128, microbatches: int | str = 3, use_m2n: bool = False,
-        prefill_devices: int = 0, transfer: str = "async",
-        prefill_chunk_tokens: int = 512, profile_stages: bool = False,
-        expert_rebalance_every: int = 0, expert_replication: bool = True,
-        zipf_route_bias: float = 0.0,
-        temperature: float = 0.0, prompt_len: int = 0,
-        warmup_requests: int = 0, seed: int = 0, verbose: bool = True):
-    """``prompt_len`` > 0 pins every request's prompt length (one prefill
+def run(arch: Optional[str] = None, *,
+        config: Optional[ServingConfig] = None, **overrides):
+    """Serve one workload described by a ``ServingConfig``.
+
+    Call styles::
+
+        run(config=ServingConfig(arch=..., runtime="pingpong", ...))
+        run("mixtral-8x22b", runtime="pingpong", n_requests=16)
+
+    Every keyword is a ``ServingConfig`` field (the legacy kwargs call
+    style maps 1:1 onto fields); explicit kwargs override ``config``.
+
+    ``prompt_len`` > 0 pins every request's prompt length (one prefill
     shape to compile — benchmarks use this to keep timing variance down);
     0 draws lengths in [2, max_seq/4).  ``warmup_requests`` > 0 serves
     that many throwaway requests through the engine first, so jit/eager
     compiles (per fresh runtime instance — the m2n shard_map alone costs
     seconds) never land in the measured wall time; reported tokens /
-    decode_iters / prefills and tok/s cover the measured batch only.
+    decode_iters / prefills / transport hops and tok/s cover the
+    measured batch only.
 
     ``expert_rebalance_every`` > 0 re-solves expert placement from live
     routing counts every N decode iterations (replicating hot experts
     unless ``expert_replication=False``); ``zipf_route_bias`` > 0
     injects a zipf(alpha) router-logit bias — the skewed-routing
-    scenario the rebalancer exists to absorb."""
-    if runtime not in RUNTIMES:
-        raise ValueError(f"runtime must be one of {RUNTIMES}, got {runtime!r}")
-    cfg = get_config(arch)
-    if use_reduced:
+    scenario the rebalancer exists to absorb.
+
+    ``transport`` selects the M2N transport backend every token/KV/
+    weight hop goes through (``core.transport``): "inproc" (the
+    single-process device_put path), "simrdma" (same movement + an
+    alpha-beta RDMA latency model per hop), or "multi"
+    (``jax.distributed`` multi-controller)."""
+    if arch is not None:
+        overrides.setdefault("arch", arch)
+    sc = (ServingConfig(**overrides) if config is None
+          else config.with_overrides(**overrides))
+    cfg = get_config(sc.arch)
+    if sc.use_reduced:
         cfg = reduced(cfg)
-    params = init_params(cfg, jax.random.PRNGKey(seed))
-    if zipf_route_bias > 0.0:
+    params = init_params(cfg, jax.random.PRNGKey(sc.seed))
+    if sc.zipf_route_bias > 0.0:
         if cfg.moe is None:
             raise ValueError("--zipf-route-bias needs an MoE arch")
         params = _inject_router_bias(
             params, cfg, zipf_router_bias(cfg.moe.n_experts,
-                                          zipf_route_bias))
+                                          sc.zipf_route_bias))
+
+    # one transport ledger for every hop of the run: M2N/N2M token
+    # shuttles, KV migration, live-placement weight regathers
+    transport = make_transport(sc.transport)
 
     # cluster topology: prefill group (optional) vs decode group; the
     # decode group is further split attention/expert by the runtime
-    prefill_devs, decode_devs = split_serving_devices(prefill_devices)
-    if verbose and prefill_devs:
+    prefill_devs, decode_devs = split_serving_devices(sc.prefill_devices)
+    if sc.verbose and prefill_devs:
         disjoint = not set(map(id, prefill_devs)) & set(map(id, decode_devs))
         note = "disjoint" if disjoint else "overlapping, single-device fallback"
         print(f"prefill cluster: {len(prefill_devs)} device(s), decode "
@@ -130,62 +158,58 @@ def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
 
     engine_kw = {}
     inst = None
-    if runtime in ("disagg", "pingpong"):
-        m = 2 if microbatches == "auto" else int(microbatches)
+    if sc.runtime in ("disagg", "pingpong"):
+        m = 2 if sc.microbatches == "auto" else int(sc.microbatches)
         inst = DisaggregatedInstance(
             cfg, params, devices=decode_devs,
-            plan=DisaggPlan(n_microbatches=m, use_m2n=use_m2n,
-                            profile_stages=profile_stages))
-        if microbatches == "auto":
+            plan=DisaggPlan(n_microbatches=m, use_m2n=sc.use_m2n,
+                            profile_stages=sc.profile_stages),
+            transport=transport)
+        if sc.microbatches == "auto":
             # measure T_a/T_e/T_c on a profiled decode iteration, then
             # apply the paper's m >= 2(1 + T_c/T_f) feasibility bound
-            m = inst.auto_microbatches(max_batch, max_m=max_batch)
+            m = inst.auto_microbatches(sc.max_batch, max_m=sc.max_batch)
             inst.plan.n_microbatches = m
-            if verbose:
+            if sc.verbose:
                 print(f"auto-selected m={m} micro-batches")
-    if runtime == "disagg":
+    if sc.runtime == "disagg":
         # runtime handle rides along so live expert rebalancing (and the
         # imbalance report in stats()) work without the pingpong engine
         engine_kw.update(decode_fn=inst.decode_step, runtime=inst)
-    elif runtime == "pingpong":
-        engine_kw.update(mode="pingpong", runtime=inst)
-    if expert_rebalance_every:
-        if inst is None:
-            raise ValueError("--expert-rebalance-every needs "
-                             "--runtime disagg|pingpong")
-        engine_kw.update(expert_rebalance_every=expert_rebalance_every,
-                         expert_replication=expert_replication)
+    elif sc.runtime == "pingpong":
+        engine_kw.update(runtime=inst)
+    if sc.expert_rebalance_every and inst is None:
+        raise ValueError("--expert-rebalance-every needs "
+                         "--runtime disagg|pingpong")
 
     if prefill_devs:
         engine_kw.update(
             prefill_worker=PrefillWorker(cfg, params, prefill_devs,
-                                         max_seq=max_seq,
-                                         chunk_tokens=prefill_chunk_tokens),
-            transfer=transfer,
+                                         max_seq=sc.max_seq,
+                                         chunk_tokens=sc.prefill_chunk_tokens),
             kv_sharding=inst.kv_sharding if inst is not None else None)
 
-    eng = Engine(cfg, params, max_batch=max_batch, max_seq=max_seq,
-                 sampling=SamplingParams(temperature=temperature),
-                 seed=seed, **engine_kw)
-    rng = np.random.RandomState(seed)
-    if warmup_requests:
-        for i in range(warmup_requests):
-            plen = prompt_len or 8
+    eng = Engine(cfg, params, config=sc, transport=transport, **engine_kw)
+    rng = np.random.RandomState(sc.seed)
+    if sc.warmup_requests:
+        for i in range(sc.warmup_requests):
+            plen = sc.prompt_len or 8
             prompt = rng.randint(2, cfg.vocab, size=plen).tolist()
             eng.submit(Request(rid=-1 - i, prompt=prompt, max_new_tokens=2))
         eng.run_until_done()
     pre = eng.stats()
-    for i in range(n_requests):
-        plen = prompt_len or int(rng.randint(2, max_seq // 4))
+    for i in range(sc.n_requests):
+        plen = sc.prompt_len or int(rng.randint(2, sc.max_seq // 4))
         prompt = rng.randint(2, cfg.vocab, size=plen).tolist()
-        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=max_new))
+        eng.submit(Request(rid=i, prompt=prompt,
+                           max_new_tokens=sc.max_new))
     t0 = time.perf_counter()
     eng.run_until_done()
     dt = time.perf_counter() - t0
     stats = eng.stats()
     for k in ("tokens", "decode_iters", "prefills", "finished"):
         stats[k] -= pre[k]
-    if warmup_requests:  # latency over measured requests only — warmup
+    if sc.warmup_requests:  # latency over measured requests only — warmup
         lat = [r.t_done - r.t_submit  # latencies include compile time
                for r in eng.finished if r.rid >= 0]
         stats["mean_latency_s"] = sum(lat) / len(lat) if lat else 0.0
@@ -199,16 +223,23 @@ def run(arch: str, *, use_reduced: bool = True, runtime: str = "monolithic",
     for k in ("rebalances", "placement_updates", "rebalance_s"):
         if k in stats:
             stats[k] -= pre.get(k, 0)
+    # transport hop counters are cumulative per kind, same treatment
+    pre_tr = pre.get("transport", {})
+    for kind, hop in stats.get("transport", {}).items():
+        if isinstance(hop, dict) and kind in pre_tr:
+            for k in hop:
+                hop[k] -= pre_tr[kind].get(k, 0)
     stats["wall_s"] = dt
     stats["decode_tok_per_s"] = stats["tokens"] / dt
-    if verbose:
-        print(f"{arch} [{runtime}"
+    if sc.verbose:
+        print(f"{sc.arch} [{sc.runtime}"
               f"{'+disagg-prefill' if prefill_devs else ''}] served "
               f"{stats['finished']} requests, "
               f"{stats['tokens']} tokens in {dt:.2f}s "
               f"({stats['decode_tok_per_s']:.1f} tok/s, "
               f"{stats['decode_iters']} decode iters)")
         print(_format_phases(stats["phases"]))
+        print(_format_transport(stats["transport"]))
         if "stages" in stats:
             print(_format_stages(stats["stages"]))
         if "imbalance" in stats:
@@ -267,25 +298,28 @@ def main():
                     help="inject a zipf(alpha) router-logit bias to "
                          "skew expert traffic (benchmark scenario for "
                          "the load balancer; 0 = off)")
+    ap.add_argument("--transport", default="inproc",
+                    choices=("inproc", "simrdma", "multi"),
+                    help="M2N transport backend every token/KV/weight "
+                         "hop goes through (see docs/transport.md): "
+                         "inproc = single-process device_put, simrdma = "
+                         "same movement + per-hop RDMA cost model, "
+                         "multi = jax.distributed multi-controller "
+                         "(coordinator/rank from REPRO_* env vars)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prompt-len", type=int, default=0,
+                    help="pin every prompt to this length (0 = random)")
+    ap.add_argument("--warmup-requests", type=int, default=0,
+                    help="throwaway requests served first so jit "
+                         "compiles stay out of the measured wall time")
     args = ap.parse_args()
     if args.arch is None and not args.reduced:
         ap.error("pass --arch, or --reduced to serve the default "
                  "mixtral-8x22b at reduced scale")
-    mb = args.microbatches if args.microbatches == "auto" \
-        else int(args.microbatches)
-    run(args.arch or "mixtral-8x22b", use_reduced=args.reduced,
-        runtime=args.runtime,
-        n_requests=args.requests, max_new=args.max_new,
-        max_batch=args.max_batch, max_seq=args.max_seq,
-        microbatches=mb, use_m2n=args.use_m2n,
-        prefill_devices=args.prefill_devices, transfer=args.transfer,
-        prefill_chunk_tokens=args.prefill_chunk_tokens,
-        profile_stages=args.profile_stages,
-        expert_rebalance_every=args.expert_rebalance_every,
-        expert_replication=args.expert_replication,
-        zipf_route_bias=args.zipf_route_bias,
-        temperature=args.temperature)
+    run(config=ServingConfig.from_args(args))
 
 
 if __name__ == "__main__":

@@ -29,6 +29,7 @@ token-for-token identical to the inline-prefill engine.
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -39,12 +40,19 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.core.load_balance import balance_experts, evaluate_placement
+from repro.core.transport import InProcessTransport
 from repro.models import decode_step, init_cache, prefill
 from repro.models.stubs import extra_inputs
+from repro.serving.config import ServingConfig
 from repro.serving.kvcache import (MicrobatchSlotAllocator, SlotAllocator,
                                    insert_rows, mb_slot_ranges, migrate_kv,
                                    reset_row)
-from repro.serving.sampler import SamplingParams, sample
+from repro.serving.sampler import SamplingParams, sample, sample_rows
+from repro.serving.stats import STATS_SCHEMA_VERSION, EngineStats
+
+# sentinel distinguishing "kwarg not passed" from an explicit value, so
+# the deprecated scalar aliases below can coexist with ``config=``
+_UNSET = object()
 
 
 @dataclass
@@ -72,18 +80,36 @@ class Request:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params: dict, *, max_batch: int = 8,
-                 max_seq: int = 256, dtype=jnp.float32,
-                 sampling: SamplingParams = SamplingParams(),
+    # scalar kwargs that moved into ServingConfig; still accepted as
+    # deprecated aliases for one release (``mode`` maps onto
+    # ``ServingConfig.runtime``)
+    _DEPRECATED_SCALARS = ("max_batch", "max_seq", "mode", "transfer",
+                           "seed", "expert_rebalance_every",
+                           "expert_replication", "expert_window")
+
+    def __init__(self, cfg: ModelConfig, params: dict, *,
+                 config: Optional[ServingConfig] = None,
+                 max_batch=_UNSET, max_seq=_UNSET, dtype=jnp.float32,
+                 sampling: Optional[SamplingParams] = None,
                  decode_fn: Optional[Callable] = None,
-                 mode: str = "monolithic", runtime=None,
+                 mode=_UNSET, runtime=None,
                  n_microbatches: Optional[int] = None,
-                 prefill_worker=None, transfer: str = "async",
-                 kv_sharding=None, seed: int = 0,
-                 expert_rebalance_every: int = 0,
-                 expert_replication: bool = True,
-                 expert_window: int = 8):
-        """mode "monolithic": decode via ``decode_fn`` (default: batched
+                 prefill_worker=None, transfer=_UNSET,
+                 kv_sharding=None, seed=_UNSET,
+                 expert_rebalance_every=_UNSET,
+                 expert_replication=_UNSET,
+                 expert_window=_UNSET,
+                 transport=None):
+        """``config``: the canonical way to set every scalar knob — a
+        ``serving.config.ServingConfig``.  The scalar kwargs listed in
+        ``_DEPRECATED_SCALARS`` are deprecated aliases kept for one
+        release; when passed they override the config and emit a
+        ``DeprecationWarning``.  Object wiring (``runtime``,
+        ``prefill_worker``, ``transport``, ``sampling``, ``decode_fn``,
+        ``kv_sharding``, ``dtype``, ``n_microbatches``) stays keyword-
+        based — those are instances the launcher owns.
+
+        mode "monolithic": decode via ``decode_fn`` (default: batched
         ``models.decode_step``; pass ``runtime.decode_step`` for the
         disaggregated path without engine-level micro-batching).
 
@@ -112,11 +138,34 @@ class Engine:
         routing across replicas is deterministic (token-index hash), so
         rebalanced serving stays token-identical under greedy
         sampling."""
-        if mode not in ("monolithic", "pingpong"):
-            raise ValueError(f"unknown engine mode {mode!r}")
-        if transfer not in ("sync", "async"):
-            raise ValueError(f"transfer must be 'sync' or 'async', "
-                             f"got {transfer!r}")
+        legacy = {k: v for k, v in (
+            ("max_batch", max_batch), ("max_seq", max_seq), ("mode", mode),
+            ("transfer", transfer), ("seed", seed),
+            ("expert_rebalance_every", expert_rebalance_every),
+            ("expert_replication", expert_replication),
+            ("expert_window", expert_window)) if v is not _UNSET}
+        base = (config if config is not None
+                else ServingConfig(max_batch=8, max_seq=256))
+        if legacy:
+            warnings.warn(
+                f"Engine({', '.join(sorted(legacy))}=...) scalar kwargs "
+                f"are deprecated; pass config=ServingConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            mode_alias = legacy.pop("mode", None)
+            if mode_alias is not None:
+                if mode_alias not in ("monolithic", "pingpong"):
+                    raise ValueError(f"unknown engine mode {mode_alias!r}")
+                legacy["runtime"] = mode_alias
+            base = base.with_overrides(**legacy)
+        self.serving_config = base
+        mode = base.engine_mode
+        max_batch, max_seq = base.max_batch, base.max_seq
+        transfer, seed = base.transfer, base.seed
+        expert_rebalance_every = base.expert_rebalance_every
+        expert_replication = base.expert_replication
+        expert_window = base.expert_window
+        if sampling is None:
+            sampling = base.sampling_params()
         if mode == "pingpong":
             if runtime is None:
                 raise ValueError("pingpong mode needs a DisaggregatedInstance"
@@ -138,6 +187,13 @@ class Engine:
                                  "plan's capacity_mode='full' (drop-free)")
         self.cfg = cfg
         self.params = params
+        # one transport ledger for the whole serving path: prefer the
+        # runtime's (so m2n/n2m/weights hops and the engine's KV hops
+        # land in the same stats), else the explicit one, else in-process
+        if transport is None:
+            transport = getattr(runtime, "transport", None)
+        self.transport = transport if transport is not None \
+            else InProcessTransport()
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.sampling = sampling
@@ -242,7 +298,8 @@ class Engine:
             t0 = time.perf_counter()
             self.cache = migrate_kv(self.cache, res.kv, slot,
                                     sharding=self.kv_sharding,
-                                    sync=self.transfer == "sync")
+                                    sync=self.transfer == "sync",
+                                    transport=self.transport)
             self.t_transfer += time.perf_counter() - t0
             self.n_transfers += 1
             self._start_request(req, slot, res.last_logits)
@@ -301,7 +358,12 @@ class Engine:
             logits, self.cache = self._decode(toks, self.cache, pos)
         self.t_decode += time.perf_counter() - t0
         self.key, k = jax.random.split(self.key)
-        nxt = sample(logits, k, self.sampling)
+        # per-request key folding: sampled tokens must not depend on
+        # which KV row a request occupies (engines pack rows differently)
+        rids = np.zeros((self.max_batch,), np.int64)
+        for req in self.running.values():
+            rids[req.slot] = req.rid
+        nxt = sample_rows(logits, k, rids, self.sampling)
         for req in self.running.values():
             tok = int(nxt[req.slot])
             req.generated.append(tok)
@@ -329,10 +391,11 @@ class Engine:
         return self.finished
 
     # ------------------------------------------------------------- metrics
-    def stats(self) -> dict:
+    def stats(self) -> EngineStats:
         lat = [r.t_done - r.t_submit for r in self.finished]
         toks = sum(len(r.generated) for r in self.finished)
         out = {
+            "schema_version": STATS_SCHEMA_VERSION,
             "finished": len(self.finished),
             "tokens": toks,
             "decode_iters": self.n_decode_iters,
@@ -354,6 +417,9 @@ class Engine:
             phases.update(prefill_s=self.t_prefill,
                           prefills=self.n_prefills)
         out["phases"] = phases
+        # per-hop wire traffic, by kind (tokens / kv / weights /
+        # collective) — the transport ledger shared with the runtime
+        out["transport"] = self.transport.stats()
         if self.mode == "pingpong":
             out["n_microbatches"] = len(self.mb_slices)
             out["stages"] = self.runtime.stage_report()

@@ -13,6 +13,7 @@ from typing import Dict, List, Optional
 import jax
 
 from repro.config import ModelConfig
+from repro.core import transport as transport_lib
 from repro.core.pingpong import even_partition
 
 
@@ -54,7 +55,7 @@ def extract_row(global_cache, row: int):
 
 
 def migrate_kv(decode_cache, request_cache, row: int, *, sharding=None,
-               sync: bool = False):
+               sync: bool = False, transport=None):
     """The paper's prefill->decode KV-transfer hop: reshard one request's
     prefill-side cache (batch dim 1) onto the decode placement and write
     it into KV row ``row`` of the decode cache.
@@ -66,12 +67,16 @@ def migrate_kv(decode_cache, request_cache, row: int, *, sharding=None,
     (sync transfer mode); by default the copy is issued asynchronously
     and overlaps whatever decode work is still in flight (JAX async
     dispatch — the analogue of the paper's layer-wise KV streaming).
+
+    The hop goes through ``transport`` (a ``core.transport.Transport``),
+    which accounts per-hop bytes/latency under the "kv" kind; the
+    process-wide default in-process backend is used when none is given.
     """
+    if transport is None:
+        transport = transport_lib.default_transport()
     if sharding is None:
         sharding = jax.tree.leaves(decode_cache)[0].sharding
-    moved = jax.device_put(request_cache, sharding)
-    if sync:
-        jax.block_until_ready(moved)
+    moved = transport.migrate_kv(request_cache, sharding, sync=sync).data
     return insert_rows(decode_cache, moved, row)
 
 

@@ -5,6 +5,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -31,3 +32,25 @@ def sample(logits: jax.Array, key: jax.Array,
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], 1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_rows(logits: jax.Array, key: jax.Array, row_ids,
+                params: SamplingParams = SamplingParams()) -> jax.Array:
+    """Placement-independent batch sampling: row i draws with
+    ``fold_in(key, row_ids[i])``.
+
+    ``jax.random.categorical`` over a (B, V) batch gives each row noise
+    tied to its *batch position* — but continuous batching moves
+    requests between KV rows, and the monolithic vs disaggregated
+    engines pack the same requests into different rows under churn.
+    Folding the per-iteration key by request id instead makes a
+    request's sampled tokens a function of (engine PRNG stream, request
+    id) only, so fixed-seed runs reproduce across engine modes and slot
+    layouts.  Greedy (temperature <= 0) ignores the key entirely."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    ids = jnp.asarray(np.asarray(row_ids, np.int64) % (1 << 32),
+                      jnp.uint32)
+    keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(ids)
+    return jax.vmap(
+        lambda lg, kk: sample(lg[None], kk, params)[0])(logits, keys)

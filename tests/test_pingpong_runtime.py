@@ -81,11 +81,16 @@ class TestScheduleTrace:
                                      plan=DisaggPlan(n_microbatches=2))
         m = inst.auto_microbatches(4, max_m=4)
         assert 1 <= m <= 4
-        # paper bound: m >= 2 (1 + T_c/T_f) before clamping
+        # paper bound: m >= 2 (1 + T_c/T_f) before clamping.  Check the
+        # relation on ONE measurement — the reduced model's t_c/t_f sits
+        # near the ceil boundary, so two independent wall-clock profiles
+        # can legitimately round to different m.
         rep = inst.measure_stage_times(4)
         unclamped = pingpong.min_microbatches(rep["t_c"],
                                               max(rep["t_a"], rep["t_e"]))
-        assert m == min(4, max(1, unclamped))
+        got = pingpong.choose_microbatches(rep["t_a"], rep["t_e"],
+                                           rep["t_c"], max_m=4)
+        assert got == min(4, max(1, unclamped))
 
 
 # ------------------------------------------------------------- allocation

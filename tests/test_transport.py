@@ -1,0 +1,318 @@
+"""Unified transport layer tests (this PR's tentpole).
+
+Covers: per-hop byte/latency accounting and hop-kind routing on the
+``Transport`` interface, the backend registry, the RdmaCostModel's
+fig10/fig11 properties, and — the acceptance bar — all three serving
+token-movement paths (M2N dispatch, KV migration, live-placement weight
+regather) going through one transport instance with the in-process
+backend staying token-identical to the monolithic engine.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_config, reduced
+from repro.core.disagg import DisaggPlan, DisaggregatedInstance
+from repro.core.load_balance import balance_experts
+from repro.core.transport import (HOP_KINDS, DistributedSpec,
+                                  InProcessTransport, RdmaCostModel,
+                                  SimRdmaTransport, Transport, TRANSPORTS,
+                                  make_transport, tree_nbytes)
+from repro.models import init_params, prefill
+from repro.serving.config import ServingConfig
+from repro.serving.engine import Engine, Request
+from repro.serving.kvcache import migrate_kv
+from repro.serving.stats import STATS_SCHEMA_VERSION
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = reduced(get_config("qwen2-moe-a2.7b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serve(cfg, params, prompts, max_new=6, **engine_kw):
+    sc = ServingConfig(max_batch=4, max_seq=64,
+                       runtime="pingpong" if "runtime" in engine_kw
+                       else "monolithic")
+    eng = Engine(cfg, params, config=sc, **engine_kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    done = {r.rid: r.generated for r in eng.run_until_done(max_iters=500)}
+    return done, eng
+
+
+def _prompts(cfg, n=6, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(2, cfg.vocab, size=rng.randint(2, 10)).tolist()
+            for _ in range(n)]
+
+
+# ------------------------------------------------------------- accounting
+class TestHandleAccounting:
+    def test_bytes_and_kind_per_hop(self):
+        tr = InProcessTransport()
+        x = jnp.zeros((64, 32), jnp.float32)        # 8192 B
+        h = tr.send_tokens(x, None)
+        assert h.kind == "tokens" and h.nbytes == 64 * 32 * 4
+        tr.migrate_kv({"k": x, "v": x}, None)
+        tr.regather_weights([x], None)
+        tr.record_collective(1000)
+        st = tr.stats()
+        assert st["backend"] == "inproc"
+        assert st["tokens"] == {"hops": 1, "bytes": 8192,
+                                "issue_s": st["tokens"]["issue_s"],
+                                "sim_s": 0.0}
+        assert st["kv"]["bytes"] == 2 * 8192
+        assert st["weights"]["hops"] == 1
+        assert st["collective"]["bytes"] == 1000
+        assert set(st) == {"backend"} | set(HOP_KINDS)
+
+    def test_fanout_scales_wire_bytes(self):
+        tr = InProcessTransport()
+        x = jnp.zeros((16,), jnp.float32)
+        assert tr.send_tokens(x, None, fanout=4).nbytes == 4 * 64
+
+    def test_sync_and_block_land_data(self):
+        tr = InProcessTransport()
+        x = jnp.arange(8.0)
+        h = tr.send_tokens(x, None, sync=True)
+        np.testing.assert_array_equal(np.asarray(h.data), np.arange(8.0))
+        np.testing.assert_array_equal(
+            np.asarray(h.block().data), np.arange(8.0))
+
+    def test_reset_stats(self):
+        tr = InProcessTransport()
+        tr.send_tokens(jnp.zeros(4), None)
+        tr.reset_stats()
+        assert tr.stats() == {"backend": "inproc"}
+
+    def test_tree_nbytes_mixed_dtypes(self):
+        tree = {"a": jnp.zeros((4,), jnp.float32),
+                "b": np.zeros((4,), np.int8)}
+        assert tree_nbytes(tree) == 16 + 4
+
+    def test_registry_and_unknown_name(self):
+        assert set(TRANSPORTS) == {"inproc", "simrdma", "multi"}
+        assert isinstance(make_transport("inproc"), InProcessTransport)
+        assert isinstance(make_transport("simrdma"), SimRdmaTransport)
+        with pytest.raises(ValueError, match="unknown transport"):
+            make_transport("pigeon")
+
+    def test_multi_spec_from_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_COORDINATOR", "10.0.0.1:999")
+        monkeypatch.setenv("REPRO_NUM_PROCESSES", "4")
+        monkeypatch.setenv("REPRO_PROCESS_ID", "3")
+        spec = DistributedSpec.from_env()
+        assert spec == DistributedSpec("10.0.0.1:999", 4, 3)
+
+    def test_multi_spec_mpi_fallback(self, monkeypatch):
+        monkeypatch.delenv("REPRO_NUM_PROCESSES", raising=False)
+        monkeypatch.delenv("REPRO_PROCESS_ID", raising=False)
+        monkeypatch.setenv("OMPI_COMM_WORLD_SIZE", "2")
+        monkeypatch.setenv("OMPI_COMM_WORLD_RANK", "1")
+        spec = DistributedSpec.from_env()
+        assert (spec.num_processes, spec.process_id) == (2, 1)
+
+    def test_single_process_multi_backend_degenerates(self):
+        # num_processes=1: no jax.distributed bring-up, behaves in-process
+        tr = make_transport("multi", spec=DistributedSpec(num_processes=1))
+        h = tr.send_tokens(jnp.arange(4.0), None, sync=True)
+        np.testing.assert_array_equal(np.asarray(h.data), np.arange(4.0))
+        assert tr.stats()["backend"] == "multi"
+
+
+# -------------------------------------------------------------- cost model
+class TestRdmaCostModel:
+    def test_fig10_m2n_beats_nccl_at_256k(self):
+        nccl, m2n = (RdmaCostModel.nccl_grouped_p2p(),
+                     RdmaCostModel.m2n_rdma())
+        s, n = 256 * 1024, 8
+        assert m2n.one_to_n(s, n) < nccl.one_to_n(s, n)
+        # paper fig10 regime: >=50% median latency reduction
+        assert m2n.one_to_n(s, n) / nccl.one_to_n(s, n) < 0.5
+
+    def test_fig11_nccl_tail_blows_up_m2n_flat(self):
+        nccl, m2n = (RdmaCostModel.nccl_grouped_p2p(),
+                     RdmaCostModel.m2n_rdma())
+        s = 256 * 1024
+        # NCCL p99 overhead grows with receiver count (per-batch jitter
+        # x ceil(N/8) batches); M2N's tail overhead stays constant
+        nccl_tail = [nccl.p99_one_to_n(s, n) - nccl.one_to_n(s, n)
+                     for n in (8, 16, 32)]
+        m2n_tail = [m2n.p99_one_to_n(s, n) - m2n.one_to_n(s, n)
+                    for n in (8, 16, 32)]
+        assert nccl_tail == sorted(nccl_tail) and nccl_tail[0] < nccl_tail[-1]
+        assert m2n_tail[0] == pytest.approx(m2n_tail[-1], rel=1e-9)
+
+    def test_simrdma_accrues_model_latency(self):
+        model = RdmaCostModel(alpha_s=1e-3, per_op_s=1e-4, bw_Bps=1e9)
+        tr = SimRdmaTransport(model)
+        x = jnp.zeros((256,), jnp.float32)          # 1024 B
+        h = tr.send_tokens(x, None, fanout=4)
+        assert h.sim_s == pytest.approx(model.one_to_n(1024, 4))
+        assert tr.stats()["tokens"]["sim_s"] == pytest.approx(h.sim_s)
+
+    def test_simrdma_default_fanout(self):
+        model = RdmaCostModel(alpha_s=0.0, per_op_s=1.0, bw_Bps=1e9)
+        tr = SimRdmaTransport(model, default_fanout=8)
+        h = tr.send_tokens(jnp.zeros(4), None)      # fanout unspecified
+        assert h.sim_s == pytest.approx(8.0, rel=1e-6)
+
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_IN_SUB = os.environ.get("REPRO_TRANSPORT_SUBPROCESS") == "1"
+
+
+def test_serving_paths_fresh_process():
+    """Drive ``TestServingPaths`` in a child interpreter.  Those tests
+    compile full serving engines; at the tail of the tier-1 suite —
+    after the process has JIT-compiled hundreds of computations —
+    jaxlib 0.4.37's CPU compiler can segfault on the next large compile,
+    so they get a fresh XLA/LLVM state of their own (same isolation
+    idiom as ``test_multidevice``)."""
+    if _IN_SUB:
+        pytest.skip("already inside the serving-paths subprocess")
+    env = dict(os.environ, REPRO_TRANSPORT_SUBPROCESS="1",
+               PYTHONPATH=os.path.join(_REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         os.path.abspath(__file__), "-k", "TestServingPaths"],
+        env=env, capture_output=True, text=True, timeout=900, cwd=_REPO)
+    assert r.returncode == 0, (f"STDOUT:\n{r.stdout[-4000:]}\n"
+                               f"STDERR:\n{r.stderr[-2000:]}")
+
+
+# ------------------------------------------- serving paths through transport
+@pytest.mark.skipif(not _IN_SUB, reason="runs in a fresh process via "
+                    "test_serving_paths_fresh_process")
+class TestServingPaths:
+    def test_pingpong_token_identical_with_transport(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, seed=7)
+        mono, _ = _serve(cfg, params, prompts)
+        tr = InProcessTransport()
+        inst = DisaggregatedInstance(
+            cfg, params, plan=DisaggPlan(n_microbatches=2, use_m2n=True),
+            transport=tr)
+        pp, eng = _serve(cfg, params, prompts, runtime=inst)
+        assert pp == mono
+        # the engine adopted the runtime's ledger; M2N + N2M hops landed
+        assert eng.transport is tr
+        st = eng.stats()
+        assert st["schema_version"] == STATS_SCHEMA_VERSION
+        assert st["transport"]["backend"] == "inproc"
+        assert st["transport"]["tokens"]["hops"] > 0
+        assert st["transport"]["tokens"]["bytes"] > 0
+
+    def test_simrdma_token_identical_and_prices_hops(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, seed=9)
+        mono, _ = _serve(cfg, params, prompts)
+        inst = DisaggregatedInstance(
+            cfg, params, plan=DisaggPlan(n_microbatches=2),
+            transport=SimRdmaTransport())
+        pp, eng = _serve(cfg, params, prompts, runtime=inst)
+        assert pp == mono
+        tok = eng.stats()["transport"]["tokens"]
+        assert tok["sim_s"] > 0.0  # every hop priced by the cost model
+
+    def test_migrate_kv_records_kv_hop(self, moe_setup):
+        cfg, params = moe_setup
+        from repro.models import init_cache
+        cache = init_cache(cfg, 2, 16, jnp.float32)
+        toks = jnp.asarray([[3, 4, 5]], jnp.int32)
+        _, req_kv = prefill(params, cfg, toks, max_seq=16)
+        tr = InProcessTransport()
+        migrate_kv(cache, req_kv, 0, transport=tr)
+        st = tr.stats()
+        assert st["kv"]["hops"] == 1
+        assert st["kv"]["bytes"] == tree_nbytes(req_kv)
+
+    def test_migrate_kv_default_transport(self, moe_setup):
+        # no transport threaded in: the process-wide default accounts it
+        from repro.core import transport as transport_lib
+        cfg, params = moe_setup
+        from repro.models import init_cache
+        cache = init_cache(cfg, 2, 16, jnp.float32)
+        toks = jnp.asarray([[3, 4, 5]], jnp.int32)
+        _, req_kv = prefill(params, cfg, toks, max_seq=16)
+        before = transport_lib.default_transport()._stats["kv"]["hops"]
+        migrate_kv(cache, req_kv, 0)
+        assert transport_lib.default_transport()._stats["kv"]["hops"] == \
+            before + 1
+
+    def test_apply_placement_records_weights_hop(self, moe_setup):
+        cfg, params = moe_setup
+        tr = InProcessTransport()
+        inst = DisaggregatedInstance(cfg, params, transport=tr)
+        loads = np.arange(cfg.moe.n_experts, dtype=np.float64) + 1.0
+        placement = balance_experts(loads, inst.n_expert_nodes,
+                                    allow_replication=True)
+        assert inst.apply_placement(placement)
+        st = tr.stats()
+        assert st["weights"]["hops"] == 1
+        # one regather covers every MoE layer's virtual-slot weights
+        assert st["weights"]["bytes"] == tree_nbytes(
+            inst.layers_expert_placed)
+
+    def test_abstract_transport_not_instantiable(self):
+        with pytest.raises(TypeError):
+            Transport()
+
+
+# ------------------------------------------------------------ ServingConfig
+class TestServingConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="runtime"):
+            ServingConfig(runtime="warp")
+        with pytest.raises(ValueError, match="transfer"):
+            ServingConfig(transfer="quantum")
+        with pytest.raises(ValueError, match="transport"):
+            ServingConfig(transport="pigeon")
+
+    def test_microbatches_coercion(self):
+        assert ServingConfig(microbatches="4").microbatches == 4
+        assert ServingConfig(microbatches="auto").microbatches == "auto"
+
+    def test_engine_mode_projection(self):
+        assert ServingConfig(runtime="disagg").engine_mode == "monolithic"
+        assert ServingConfig(runtime="pingpong").engine_mode == "pingpong"
+
+    def test_from_args_aliases(self):
+        import argparse
+        ns = argparse.Namespace(arch=None, reduced=True, requests=5,
+                                runtime="pingpong", transport="simrdma",
+                                tolerance=0.5)  # launcher-only: ignored
+        sc = ServingConfig.from_args(ns)
+        assert sc.n_requests == 5 and sc.use_reduced
+        assert sc.arch == "mixtral-8x22b"  # default kept when arch=None
+        assert sc.transport == "simrdma"
+
+    def test_to_engine_kwargs_roundtrip(self, moe_setup):
+        cfg, params = moe_setup
+        sc = ServingConfig(max_batch=2, max_seq=32, temperature=0.5,
+                           top_k=3, seed=11)
+        eng = Engine(cfg, params, **sc.to_engine_kwargs())
+        assert eng.serving_config is sc
+        assert eng.max_batch == 2 and eng.sampling.top_k == 3
+
+    def test_deprecated_scalar_kwargs_warn_and_apply(self, moe_setup):
+        cfg, params = moe_setup
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            eng = Engine(cfg, params, max_batch=3, max_seq=32, seed=5)
+        assert eng.max_batch == 3
+        assert eng.serving_config.seed == 5
+
+    def test_deprecated_mode_alias_validated(self, moe_setup):
+        cfg, params = moe_setup
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match="unknown engine mode"):
+                Engine(cfg, params, mode="sideways")
