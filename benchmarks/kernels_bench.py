@@ -16,7 +16,9 @@ KEY = jax.random.PRNGKey(7)
 
 
 def run():
-    # grouped matmul: mixtral-scale expert tile (E=8, C=512, d=6144 -> tiles)
+    # grouped matmul: reduced expert tile (E=4, C=256, d=512, f=1024 —
+    # one (128,128,512) MXU tile per grid step; mixtral-scale d=6144
+    # tiles identically, just with more steps)
     E, C, d, f = 4, 256, 512, 1024
     x = jax.random.normal(KEY, (E, C, d), jnp.float32)
     w = jax.random.normal(jax.random.fold_in(KEY, 1), (E, d, f), jnp.float32)
@@ -52,6 +54,20 @@ def run():
     emit("kernel_gating_topk", us_k,
          f"jnp_ref={us_r:.0f}us; qwen2 shape T={T} E={E2} K={K}, "
          f"one VMEM-resident logits tile per 256 tokens")
+
+    # fused gating+dispatch: the serving hot path's router matmul ->
+    # top-k -> capacity-slot build in one kernel (mixtral shape)
+    T3, d3, E3, K3, cap = 512, 256, 8, 2, 128
+    x3 = jax.random.normal(KEY, (T3, d3))
+    wr3 = jax.random.normal(jax.random.fold_in(KEY, 5), (d3, E3))
+    us_k = timeit(lambda: ops.gating_dispatch(x3, wr3, K3, n_buckets=E3,
+                                              capacity=cap))
+    fn4 = jax.jit(lambda: ref.gating_dispatch_ref(x3, wr3, K3, E3, cap))
+    us_r = timeit(fn4)
+    emit("kernel_gating_dispatch", us_k,
+         f"jnp_ref={us_r:.0f}us; mixtral shape T={T3} E={E3} K={K3} "
+         f"cap={cap}, per-bucket occupancy carried across 256-token "
+         f"blocks in VMEM scratch")
 
 
 if __name__ == "__main__":

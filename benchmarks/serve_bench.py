@@ -22,8 +22,11 @@ baseline must be regenerated on the CI runner class it gates.
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import sys
+
+import jax
 
 from benchmarks.common import emit
 from repro.launch.serve import run as serve_run
@@ -50,6 +53,13 @@ CONFIGS = (
     ("pingpong_zipf_static", {"zipf_route_bias": 1.2}),
     ("pingpong_zipf_rebalanced", {"zipf_route_bias": 1.2,
                                   "expert_rebalance_every": 2}),
+    # the kernel hot path (flash decode attention + fused
+    # gating/dispatch + grouped expert MLP) through the standard
+    # ping-pong flow.  Interpret-mode wall clock on this CPU container
+    # is far below the jnp path's — the gate tracks it as its own entry
+    # so the kernel path can't silently rot (parity is asserted by
+    # tests/test_disagg_kernels.py / test_multidevice.py)
+    ("pingpong_kernels", {"use_kernels": True}),
 )
 
 PHASE_KEYS = ("prefill_s", "transfer_s", "decode_s", "prefills",
@@ -68,12 +78,24 @@ WORKLOAD = dict(use_reduced=True, n_requests=6, max_new=4, max_batch=4,
 
 def _serve_once(name: str, extra: dict) -> dict:
     runtime = "pingpong" if name.startswith("pingpong") else name
-    return serve_run("mixtral-8x22b", runtime=runtime, **WORKLOAD, **extra)
+    try:
+        return serve_run("mixtral-8x22b", runtime=runtime, **WORKLOAD,
+                         **extra)
+    finally:
+        # every run builds a fresh engine/runtime (per-instance jits;
+        # warmup_requests absorbs the recompile before timing), so
+        # nothing is reused across runs — but dead executables pin LLVM
+        # JIT code pages and a long --baseline-collects sweep exhausts
+        # vm.max_map_count ("LLVM compilation error: Cannot allocate
+        # memory").  Drop them eagerly to bound the map count at ~1 run.
+        gc.collect()
+        jax.clear_caches()
 
 
 def _entry(best: dict, runs: list) -> dict:
     entry = {k: best[k] for k in ("tokens", "decode_iters", "wall_s",
                                   "decode_tok_per_s", "finished")}
+    entry["use_kernels"] = bool(best.get("use_kernels", False))
     entry["tok_per_s_runs"] = runs
     entry["phases"] = {k: best["phases"][k] for k in PHASE_KEYS
                        if k in best["phases"]}

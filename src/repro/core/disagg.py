@@ -236,37 +236,55 @@ class DisaggregatedInstance:
         rep_e = NamedSharding(self.expert_mesh, P())
 
         def attn_phase(p, x, act, cache, pos, window, tbl=None):
-            delta, new_cache = self_attn_decode_sublayer(p, cfg, x, pos,
-                                                         cache, window)
+            delta, new_cache = self_attn_decode_sublayer(
+                p, cfg, x, pos, cache, window,
+                use_kernels=self.plan.use_kernels)
             x = x + delta
             h = rms_norm(x, p["ln2"])
             if cfg.moe is None or self.plan.use_m2n:
                 # m2n: routing+dispatch happen on the expert shards; only
                 # the (T, d) activations cross the wire
                 return x, h, new_cache, None
-            routing = moe_lib.route(h, p["router"], cfg.moe.top_k,
-                                    p.get("router_bias"))
-            # idle KV rows are decoded anyway (static batch shape) but
-            # must not pollute the live traffic trace
-            counts = moe_lib.routing_counts(routing, cfg.moe.n_experts, act)
             cap = moe_lib.expert_capacity(h.shape[0], cfg.moe,
                                           self.plan.capacity_mode)
             if tbl is None:
                 n_buckets = cfg.moe.n_experts
+                spn = n_buckets
             else:
                 # live placement: route each (token, k) to one replica of
                 # its expert — a virtual slot id in the node-major
                 # (N*S, ...) gathered weight layout.  Same expert
                 # weights, same combine → token-identical output.
-                vslot, _ = moe_lib.replica_assign(
-                    routing.experts, tbl["rep_node"], tbl["rep_slot"],
-                    tbl["rep_cum"],
-                    slots_per_node=self.placement_slots)
-                routing = moe_lib.Routing(routing.gates, vslot,
-                                          routing.probs)
                 n_buckets = self.n_expert_nodes * self.placement_slots
-            idx_buf, gate_buf = moe_lib.dispatch_indices(
-                routing, n_buckets, cap)
+                spn = self.placement_slots
+            if self.plan.use_kernels:
+                # fused Pallas router+top-k+dispatch (act = live-row
+                # weights keeps idle KV rows out of the traffic trace)
+                from repro.kernels import ops as kops
+                tk = {} if tbl is None else {
+                    "rep_node": tbl["rep_node"],
+                    "rep_slot": tbl["rep_slot"],
+                    "rep_cum": tbl["rep_cum"]}
+                idx_buf, gate_buf, counts = kops.gating_dispatch(
+                    h, p["router"], cfg.moe.top_k, n_buckets=n_buckets,
+                    capacity=cap, bias=p.get("router_bias"),
+                    count_weights=act, slots_per_node=spn, **tk)
+            else:
+                routing = moe_lib.route(h, p["router"], cfg.moe.top_k,
+                                        p.get("router_bias"))
+                # idle KV rows are decoded anyway (static batch shape) but
+                # must not pollute the live traffic trace
+                counts = moe_lib.routing_counts(routing, cfg.moe.n_experts,
+                                                act)
+                if tbl is not None:
+                    vslot, _ = moe_lib.replica_assign(
+                        routing.experts, tbl["rep_node"], tbl["rep_slot"],
+                        tbl["rep_cum"],
+                        slots_per_node=self.placement_slots)
+                    routing = moe_lib.Routing(routing.gates, vslot,
+                                              routing.probs)
+                idx_buf, gate_buf = moe_lib.dispatch_indices(
+                    routing, n_buckets, cap)
             xe = h.at[idx_buf].get(mode="fill", fill_value=0)  # (E, C, d)
             return x, h, new_cache, {"xe": xe, "idx": idx_buf,
                                      "gates": gate_buf, "counts": counts}
@@ -291,7 +309,8 @@ class DisaggregatedInstance:
                 dict(pe, **router_p), h, cfg.moe, cfg.act,
                 self.plan.capacity_mode, mesh=self.expert_mesh,
                 data_axes=(), expert_axis="ep", tables=tbl,
-                with_counts=True, count_weights=act)
+                with_counts=True, count_weights=act,
+                use_kernels=self.plan.use_kernels)
             return y, counts
 
         def combine_tail(p, x, h, y):

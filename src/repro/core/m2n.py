@@ -58,7 +58,8 @@ def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
                            tables: Optional[dict] = None,
                            with_counts: bool = False,
                            count_weights: Optional[jax.Array] = None,
-                           transport=None):
+                           transport=None,
+                           use_kernels: bool = False):
     """M2N routed-experts computation under shard_map.
 
     x: (T, d) sharded over ``data_axes``; expert weights sharded over
@@ -82,6 +83,16 @@ def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
     that is trace time, so jitted serving paths account the hop at the
     runtime level instead (``core.disagg`` does).
 
+    use_kernels: run the shard-local hot path on the Pallas kernels —
+    the fused ``gating_dispatch`` (router matmul → top-k → owner-filtered
+    dispatch buffers, placement tables included) replaces the ``route``
+    + ``replica_assign`` + ``dispatch_indices`` chain, and the three
+    per-expert einsums become ``kops.grouped_mlp`` with the
+    capacity-drop-aware row mask.  The kernel path reports ``aux = 0``
+    (the serving decode paths never consume the load-balance loss) and
+    is token-parity with the jnp path; not supported with
+    ``weights_2d``.
+
     tables: executable expert placement (jax arrays mirroring
     ``core.load_balance.PlacementTables``: rep_node/rep_slot/rep_cum
     (E, R) plus int "slots_per_node").  When set, ``params["we*"]`` must
@@ -93,6 +104,9 @@ def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
     """
     n_shards = mesh.shape[expert_axis]
     E = cfg.n_experts
+    if use_kernels and weights_2d:
+        raise NotImplementedError("use_kernels is not supported with "
+                                  "weights_2d")
     if tables is not None:
         if weights_2d:
             raise NotImplementedError("placement tables are not supported "
@@ -127,36 +141,55 @@ def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
             cw = jax.lax.all_gather(cw, dtuple, axis=0, tiled=True)
         else:
             x_all = x_loc
-        # 1. routing — replicated across the expert axis (paper: gating is
-        #    fused on the attention side; every expert shard knows the plan)
-        routing = moe_lib.route(x_all, router_w, cfg.top_k, bias)
-        aux = moe_lib.load_balance_loss(routing, E)
-        counts = moe_lib.routing_counts(routing, E, cw)
-        j = jax.lax.axis_index(expert_axis)
-        if tbl:
-            # placement-table ownership: token-hash replica assignment
-            vslot, node = moe_lib.replica_assign(routing.experts, *tbl,
-                                                 slots_per_node=e_loc)
-            local = node == j
-            local_ids = jnp.where(local, vslot - j * e_loc, 0)
-        else:
-            owner = routing.experts // e_loc
-            local = owner == j
-            local_ids = jnp.where(local, routing.experts - j * e_loc, 0)
         t_all = x_all.shape[0]
         cap = moe_lib.expert_capacity(t_all, cfg, capacity_mode)
-        # 2. dispatch: gather ONLY locally-routed tokens — no wire traffic
-        r_loc = moe_lib.Routing(routing.gates, local_ids, routing.probs)
-        idx_buf, gate_buf = moe_lib.dispatch_indices(r_loc, e_loc, cap,
-                                                     valid=local)
-        xe = x_all.at[idx_buf].get(mode="fill", fill_value=0)
-        # 3. complete per-expert GEMMs on the local shard (d_ff possibly
-        #    sliced over the data axes in weights_2d mode)
-        h = activation(jnp.einsum("ecd,edf->ecf", xe, w1), act)
-        h = h * jnp.einsum("ecd,edf->ecf", xe, w3)
-        out = jnp.einsum("ecf,efd->ecd", h, w2)
-        if weights_2d and dtuple:
-            out = jax.lax.psum(out, dtuple)    # reduce f-partials
+        j = jax.lax.axis_index(expert_axis)
+        if use_kernels:
+            # fused Pallas path: router matmul -> top-k -> owner-filtered
+            # dispatch buffers in one kernel; the decode serving paths
+            # never consume the aux loss, so it is pinned to 0 here.
+            from repro.kernels import ops as kops
+            tk = dict(zip(("rep_node", "rep_slot", "rep_cum"), tbl))
+            idx_buf, gate_buf, counts = kops.gating_dispatch(
+                x_all, router_w, cfg.top_k, n_buckets=n_shards * e_loc,
+                capacity=cap, bias=bias, count_weights=cw, owner=j,
+                slots_per_node=e_loc, **tk)
+            aux = jnp.zeros((), jnp.float32)
+            xe = x_all.at[idx_buf].get(mode="fill", fill_value=0)
+            # 3'. grouped per-expert MLP kernel, dropped/empty capacity
+            #     slots masked to exact zeros
+            out = kops.grouped_mlp(xe, w1, w3, w2, act,
+                                   row_valid=idx_buf < t_all)
+        else:
+            # 1. routing — replicated across the expert axis (paper:
+            #    gating is fused on the attention side; every expert
+            #    shard knows the plan)
+            routing = moe_lib.route(x_all, router_w, cfg.top_k, bias)
+            aux = moe_lib.load_balance_loss(routing, E)
+            counts = moe_lib.routing_counts(routing, E, cw)
+            if tbl:
+                # placement-table ownership: token-hash replica assignment
+                vslot, node = moe_lib.replica_assign(routing.experts, *tbl,
+                                                     slots_per_node=e_loc)
+                local = node == j
+                local_ids = jnp.where(local, vslot - j * e_loc, 0)
+            else:
+                owner = routing.experts // e_loc
+                local = owner == j
+                local_ids = jnp.where(local, routing.experts - j * e_loc, 0)
+            # 2. dispatch: gather ONLY locally-routed tokens — no wire
+            #    traffic
+            r_loc = moe_lib.Routing(routing.gates, local_ids, routing.probs)
+            idx_buf, gate_buf = moe_lib.dispatch_indices(r_loc, e_loc, cap,
+                                                         valid=local)
+            xe = x_all.at[idx_buf].get(mode="fill", fill_value=0)
+            # 3. complete per-expert GEMMs on the local shard (d_ff
+            #    possibly sliced over the data axes in weights_2d mode)
+            h = activation(jnp.einsum("ecd,edf->ecf", xe, w1), act)
+            h = h * jnp.einsum("ecd,edf->ecf", xe, w3)
+            out = jnp.einsum("ecf,efd->ecd", h, w2)
+            if weights_2d and dtuple:
+                out = jax.lax.psum(out, dtuple)    # reduce f-partials
         # 4. combine: weighted partial sum, reduced over the expert axis.
         y = jnp.zeros((t_all, x_all.shape[1]), jnp.float32)
         w = out.astype(jnp.float32) * gate_buf[..., None]
@@ -204,18 +237,20 @@ def sharded_routed_experts(params: dict, x: jax.Array, cfg: MoEConfig,
 @contextlib.contextmanager
 def use_m2n(mesh: jax.sharding.Mesh, data_axes: Sequence[str] = ("data",),
             expert_axis: str = "model", weights_2d: bool = False,
-            transport=None):
+            transport=None, use_kernels: bool = False):
     """Context manager: route every MoE layer through the M2N dispatch.
 
     ``transport`` threads a ``core.transport.Transport`` into every
     dispatch for combine-traffic accounting (see
-    ``sharded_routed_experts`` for the jit caveat)."""
+    ``sharded_routed_experts`` for the jit caveat); ``use_kernels``
+    selects the fused Pallas dispatch + grouped-MLP shard path."""
 
     def impl(params, x, cfg, act, capacity_mode):
         return sharded_routed_experts(
             params, x, cfg, act, capacity_mode, mesh=mesh,
             data_axes=data_axes, expert_axis=expert_axis,
-            weights_2d=weights_2d, transport=transport)
+            weights_2d=weights_2d, transport=transport,
+            use_kernels=use_kernels)
 
     prev = moe_lib.set_routed_impl(impl)
     try:

@@ -1,3 +1,13 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the serving hot path (paper §6 "fused
+kernels"), validated in interpret mode on CPU against the pure-jnp
+oracles in ``repro.kernels.ref``.
+
+The public API is the jit'd ``ops`` wrappers re-exported here — callers
+use ``from repro.kernels import grouped_mlp`` (or ``ops.grouped_mlp``)
+rather than deep-importing the per-kernel modules.
+"""
+from repro.kernels.ops import (decode_attention, gating_dispatch,
+                               gating_topk, grouped_matmul, grouped_mlp)
+
+__all__ = ["decode_attention", "gating_dispatch", "gating_topk",
+           "grouped_matmul", "grouped_mlp"]

@@ -1,4 +1,4 @@
-"""Fused gating Pallas TPU kernel (paper §6 "fused kernels").
+"""Fused gating Pallas TPU kernels (paper §6 "fused kernels").
 
 Attention nodes must, per token: run the router GEMM, softmax, select
 top-k experts, normalize combine weights, and produce per-expert token
@@ -6,9 +6,24 @@ counts for the M2N dispatch.  Done naively this is a chain of small
 memory-bound ops; the paper fuses them into one kernel.  Here the whole
 chain runs on one VMEM-resident (Tb, E) logits tile per grid step.
 
-Outputs: gates (T,K) f32, experts (T,K) int32, per-block expert counts
-(nb, E) int32 (summed by the ops wrapper to global counts — the "tokens
-per expert node" header the M2N sender needs).
+Two kernels share the router-GEMM → softmax → iterative-top-k core:
+
+``gating_topk`` — gates (T,K) f32, experts (T,K) int32, per-block expert
+counts (nb, E) int32 (summed by the ops wrapper to global counts — the
+"tokens per expert node" header the M2N sender needs).
+
+``gating_dispatch`` — the full fused dispatch build the serving hot path
+uses: router GEMM + bias, softmax, top-k, optional replica assignment
+against live placement tables (``models.moe.replica_assign`` semantics,
+token-index hash recomputed in-kernel), shard-ownership filter, and
+capacity-slot positions.  Slot order is exactly
+``models.moe.dispatch_indices``'s token-major first-come-first-served
+order: within a block via a flattened one-hot cumsum, across blocks via
+a VMEM scratch of running per-bucket occupancy (the grid is sequential,
+so block i+1 sees the totals of blocks 0..i).  The (n_buckets, C)
+index/gate buffer scatter stays in the jnp wrapper — TPU kernels avoid
+in-kernel scatters; the fusion win is eliminating the memory-bound
+(T*K, E) one-hot cumsum chain and the separate router/top-k passes.
 """
 from __future__ import annotations
 
@@ -17,13 +32,19 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, w_ref, gates_ref, idx_ref, counts_ref, *, top_k: int):
-    x = x_ref[...].astype(jnp.float32)
-    w = w_ref[...].astype(jnp.float32)
+def _topk_core(x, w, top_k: int, bias=None):
+    """Router GEMM (+ optional logit bias) → softmax → iterative top-k.
+
+    Returns (gates (Tb,K) f32 normalized, experts (Tb,K) int32) —
+    identical selection/tie-breaking to ``jax.lax.top_k`` (argmax picks
+    the lowest index on ties, like top_k's stable sort)."""
     logits = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)
+    if bias is not None:
+        logits = logits + bias
     E = logits.shape[-1]
     probs = jax.nn.softmax(logits, axis=-1)
     # iterative top-k: k rounds of (argmax, mask) — k is small and static
@@ -37,7 +58,15 @@ def _kernel(x_ref, w_ref, gates_ref, idx_ref, counts_ref, *, top_k: int):
         remaining = remaining * (1.0 - jax.nn.one_hot(idx, E, dtype=jnp.float32))
     gates = jnp.stack(gate_cols, axis=-1)
     idx = jnp.stack(idx_cols, axis=-1)
-    gates_ref[...] = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return gates / jnp.sum(gates, axis=-1, keepdims=True), idx
+
+
+def _kernel(x_ref, w_ref, gates_ref, idx_ref, counts_ref, *, top_k: int):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    gates, idx = _topk_core(x, w, top_k)
+    E = w.shape[-1]
+    gates_ref[...] = gates
     idx_ref[...] = idx
     onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)      # (Tb, K, E)
     counts_ref[...] = jnp.sum(onehot, axis=(0, 1))[None]
@@ -77,3 +106,193 @@ def gating_topk(x: jax.Array, w_router: jax.Array, top_k: int, *,
         interpret=interpret,
     )(x, w_router)
     return gates, idx, jnp.sum(counts, axis=0)
+
+
+def _hash01(tok):
+    """In-kernel twin of ``models.moe._token_hash01`` (splitmix-style):
+    token index -> [0, 1) f32.  Must stay bit-identical so the kernel's
+    replica choice matches the jnp path's."""
+    h = tok.astype(jnp.uint32) * jnp.uint32(2654435761)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(2246822519)
+    h = h ^ (h >> 13)
+    return h.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+
+
+def _dispatch_kernel(*refs, top_k: int, n_buckets: int, slots_per_node: int,
+                     tb: int, use_tables: bool):
+    if use_tables:
+        (x_ref, w_ref, b_ref, cw_ref, own_ref, rn_ref, rs_ref, rc_ref,
+         gates_ref, bucket_ref, pos_ref, valid_ref, counts_ref,
+         base_ref) = refs
+    else:
+        (x_ref, w_ref, b_ref, cw_ref, own_ref,
+         gates_ref, bucket_ref, pos_ref, valid_ref, counts_ref,
+         base_ref) = refs
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _zero_base():
+        # running per-bucket occupancy carried across sequential grid
+        # steps — the cross-block half of dispatch_indices' cumsum
+        base_ref[...] = jnp.zeros_like(base_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    gates, experts = _topk_core(x, w, top_k, bias=b_ref[...])
+    gates_ref[...] = gates
+    E = w.shape[-1]
+    oh_e = jax.nn.one_hot(experts, E, dtype=jnp.float32)     # (Tb, K, E)
+    # per-original-expert weighted counts (the live traffic trace) —
+    # computed before any replica split, like the jnp path
+    cw = cw_ref[...]                                          # (Tb, 1)
+    counts_ref[...] = jnp.sum(oh_e * cw[:, :, None], axis=(0, 1))[None]
+
+    if use_tables:
+        # replica_assign: hash the *global* token index against the
+        # replica cumulative-traffic fractions; all (E,R) table lookups
+        # are one_hot matmuls (no dynamic gather on TPU)
+        R = rc_ref.shape[-1]
+        tok = i * tb + jax.lax.broadcasted_iota(jnp.int32, (tb, 1), 0)
+        u = _hash01(tok)                                      # (Tb, 1)
+        flat_e = oh_e.reshape(tb * top_k, E)
+        take = lambda t_ref: jax.lax.dot_general(
+            flat_e, t_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(tb, top_k, R)
+        cum = take(rc_ref)                                    # (Tb, K, R)
+        r = jnp.sum(u[:, :, None] >= cum, axis=-1).astype(jnp.int32)
+        r = jnp.minimum(r, R - 1)
+        oh_r = jax.nn.one_hot(r, R, dtype=jnp.float32)        # (Tb, K, R)
+        node = jnp.sum(take(rn_ref) * oh_r, -1).astype(jnp.int32)
+        slot = jnp.sum(take(rs_ref) * oh_r, -1).astype(jnp.int32)
+        vslot = node * slots_per_node + slot
+    else:
+        vslot = experts
+        node = vslot // slots_per_node
+    own = own_ref[0, 0]
+    valid = (own < 0) | (node == own)                         # (Tb, K)
+    bucket_ref[...] = vslot
+    valid_ref[...] = valid.astype(jnp.int32)
+
+    # capacity-slot positions, token-major within the block (exactly
+    # dispatch_indices' flattened cumsum order), only valid entries
+    # occupy a slot
+    oh_b = (jax.nn.one_hot(vslot, n_buckets, dtype=jnp.float32)
+            * valid[..., None].astype(jnp.float32))           # (Tb, K, B)
+    flat = oh_b.reshape(tb * top_k, n_buckets)
+    run = jnp.cumsum(flat, axis=0) - flat
+    pos_in = jnp.sum(run.reshape(tb, top_k, n_buckets) * oh_b, axis=-1)
+    base = base_ref[...]                                      # (1, B) f32
+    pos = pos_in + jnp.sum(oh_b * base[0][None, None, :], axis=-1)
+    pos_ref[...] = pos.astype(jnp.int32)
+    base_ref[...] = base + jnp.sum(flat, axis=0)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "n_buckets",
+                                             "capacity", "slots_per_node",
+                                             "tb", "interpret"))
+def gating_dispatch(x: jax.Array, w_router: jax.Array, top_k: int,
+                    n_buckets: int, capacity: int, *,
+                    bias=None, count_weights=None, owner=None,
+                    rep_node=None, rep_slot=None, rep_cum=None,
+                    slots_per_node: int = 0, tb: int = 256,
+                    interpret: bool = True):
+    """Fused router → top-k → dispatch-index build.
+
+    x: (T, d), w_router: (d, E).  Returns
+    (idx_buf (rows, capacity) int32 with sentinel T = empty,
+     gate_buf (rows, capacity) f32,
+     counts (E,) f32 weighted per-original-expert routed-token counts),
+    bit-matching the ``route`` + ``replica_assign`` + ``dispatch_indices``
+    jnp chain (``kernels.ref.gating_dispatch_ref``).
+
+    ``n_buckets``: dispatch bucket count — E for plain expert dispatch,
+    N*S virtual slots under live placement tables.  Tokens past
+    ``capacity`` per bucket are dropped first-come-first-served (the
+    ``capacity_mode != 'full'`` drop semantics).
+
+    ``owner``: optional traced shard id (``jax.lax.axis_index`` inside
+    the m2n shard_map) — only (token, k) pairs whose bucket's node
+    (``bucket // slots_per_node``) equals ``owner`` occupy a slot, and
+    the returned buffers cover that node's ``slots_per_node`` local
+    buckets (rows = slots_per_node).  None keeps every pair and returns
+    global (rows = n_buckets) buffers.
+
+    ``rep_node``/``rep_slot``/``rep_cum``: optional (E, R) live placement
+    tables (``core.load_balance.PlacementTables``); the kernel then maps
+    each (token, k) to one replica's virtual slot via the deterministic
+    token-index hash, exactly like ``models.moe.replica_assign``.
+    """
+    T, d = x.shape
+    E = w_router.shape[1]
+    use_tables = rep_node is not None
+    if not slots_per_node:
+        slots_per_node = n_buckets
+    while T % tb:
+        tb //= 2
+    tb = max(tb, 1)
+    grid = (T // tb,)
+    b = (jnp.zeros((E,), jnp.float32) if bias is None else bias)
+    cw = (jnp.ones((T,), jnp.float32) if count_weights is None
+          else count_weights.astype(jnp.float32))
+    own = (jnp.full((1, 1), -1, jnp.int32) if owner is None
+           else jnp.asarray(owner, jnp.int32).reshape(1, 1))
+    inputs = [x, w_router, b.astype(jnp.float32).reshape(1, E),
+              cw.reshape(T, 1), own]
+    in_specs = [
+        pl.BlockSpec((tb, d), lambda i: (i, 0)),
+        pl.BlockSpec((d, E), lambda i: (0, 0)),
+        pl.BlockSpec((1, E), lambda i: (0, 0)),
+        pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        pl.BlockSpec((1, 1), lambda i: (0, 0)),
+    ]
+    if use_tables:
+        R = rep_cum.shape[-1]
+        inputs += [rep_node.astype(jnp.int32), rep_slot.astype(jnp.int32),
+                   rep_cum.astype(jnp.float32)]
+        in_specs += [pl.BlockSpec((E, R), lambda i: (0, 0))] * 3
+    gates, bucket, pos, valid, counts = pl.pallas_call(
+        functools.partial(_dispatch_kernel, top_k=top_k,
+                          n_buckets=n_buckets,
+                          slots_per_node=slots_per_node, tb=tb,
+                          use_tables=use_tables),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((tb, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((tb, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((tb, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((tb, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((1, E), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((grid[0], E), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, n_buckets), jnp.float32)],
+        interpret=interpret,
+    )(*inputs)
+
+    # (rows, C) buffer scatter — stays jnp (no in-kernel scatter on TPU)
+    if owner is None:
+        rows, b_idx = n_buckets, bucket
+    else:
+        rows = slots_per_node
+        b_idx = bucket - jnp.asarray(owner, jnp.int32) * slots_per_node
+    keep = (valid > 0) & (pos < capacity)
+    # dropped/foreign entries land in the out-of-bounds capacity column
+    # (row clamped in-range so mode="drop" keys off the column alone)
+    slot = jnp.where(keep, pos, capacity)
+    b_idx = jnp.clip(b_idx, 0, rows - 1)
+    tok = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None],
+                           (T, top_k))
+    bf, sf = b_idx.reshape(-1), slot.reshape(-1)
+    idx_buf = jnp.full((rows, capacity), T, jnp.int32)
+    idx_buf = idx_buf.at[bf, sf].set(tok.reshape(-1), mode="drop")
+    gate_buf = jnp.zeros((rows, capacity), jnp.float32)
+    gate_buf = gate_buf.at[bf, sf].set(gates.reshape(-1), mode="drop")
+    return idx_buf, gate_buf, jnp.sum(counts, axis=0)

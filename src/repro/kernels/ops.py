@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.gating_topk import gating_dispatch as _gating_dispatch
 from repro.kernels.gating_topk import gating_topk as _gating_topk
 from repro.kernels.grouped_matmul import grouped_matmul as _grouped_matmul
 from repro.models.common import activation
@@ -35,16 +36,32 @@ def gating_topk(x, w_router, top_k, **kw):
     return _gating_topk(x, w_router, top_k, **kw)
 
 
+def gating_dispatch(x, w_router, top_k, n_buckets, capacity, **kw):
+    """Fused router → top-k → dispatch-index build (the serving hot
+    path's replacement for the route + dispatch_indices chain; see
+    ``kernels.gating_topk.gating_dispatch`` for the full contract)."""
+    kw.setdefault("interpret", _default_interpret())
+    return _gating_dispatch(x, w_router, top_k, n_buckets, capacity, **kw)
+
+
 def decode_attention(q, k_cache, v_cache, cache_pos, pos, **kw):
     kw.setdefault("interpret", _default_interpret())
     return _decode_attention(q, k_cache, v_cache, cache_pos, pos, **kw)
 
 
-def grouped_mlp(xe, w1, w3, w2, act: str = "silu", **kw):
+def grouped_mlp(xe, w1, w3, w2, act: str = "silu", row_valid=None, **kw):
     """Per-expert gated MLP built from three grouped matmuls.
 
     xe: (E, C, d) expert token buffers -> (E, C, d).
+
+    row_valid: optional (E, C) bool — the capacity-drop-aware variant for
+    ``capacity_mode != 'full'``: rows holding a dropped/empty capacity
+    slot are forced to exact zeros on output, so the combine scatter sees
+    zeros even for activations with ``act(0) != 0``.
     """
     h = activation(grouped_matmul(xe, w1, **kw).astype(jnp.float32), act)
     h = h * grouped_matmul(xe, w3, **kw).astype(jnp.float32)
-    return grouped_matmul(h.astype(xe.dtype), w2, **kw)
+    out = grouped_matmul(h.astype(xe.dtype), w2, **kw)
+    if row_valid is not None:
+        out = out * row_valid[..., None].astype(out.dtype)
+    return out

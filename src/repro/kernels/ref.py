@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models import moe as _moe
 from repro.models.attention import decode_attention as _decode_attention_jnp
 from repro.models.common import activation
 
@@ -38,6 +39,37 @@ def gating_topk_ref(x: jax.Array, w_router: jax.Array, top_k: int):
     counts = jnp.sum(jax.nn.one_hot(experts, w_router.shape[1],
                                     dtype=jnp.int32), axis=(0, 1))
     return gates, experts.astype(jnp.int32), counts
+
+
+def gating_dispatch_ref(x, w_router, top_k: int, n_buckets: int,
+                        capacity: int, *, bias=None, count_weights=None,
+                        owner=None, rep_node=None, rep_slot=None,
+                        rep_cum=None, slots_per_node: int = 0):
+    """Fused gating+dispatch oracle — literally the ``route`` →
+    ``replica_assign`` → ``dispatch_indices`` jnp chain the serving
+    paths (``core.disagg`` attn phase, ``core.m2n`` local dispatch) are
+    built from, so kernel parity here implies serving-path parity."""
+    if not slots_per_node:
+        slots_per_node = n_buckets
+    routing = _moe.route(x, w_router, top_k, bias)
+    counts = _moe.routing_counts(routing, w_router.shape[1], count_weights)
+    if rep_node is not None:
+        vslot, node = _moe.replica_assign(routing.experts, rep_node,
+                                          rep_slot, rep_cum,
+                                          slots_per_node=slots_per_node)
+    else:
+        vslot = routing.experts
+        node = vslot // slots_per_node
+    if owner is not None:
+        valid = node == owner
+        local = jnp.where(valid, vslot - owner * slots_per_node, 0)
+        r = _moe.Routing(routing.gates, local, routing.probs)
+        idx_buf, gate_buf = _moe.dispatch_indices(r, slots_per_node,
+                                                  capacity, valid=valid)
+    else:
+        r = _moe.Routing(routing.gates, vslot, routing.probs)
+        idx_buf, gate_buf = _moe.dispatch_indices(r, n_buckets, capacity)
+    return idx_buf, gate_buf, counts
 
 
 def decode_attention_ref(q, k_cache, v_cache, cache_pos, pos, *,

@@ -163,6 +163,7 @@ def run(arch: Optional[str] = None, *,
         inst = DisaggregatedInstance(
             cfg, params, devices=decode_devs,
             plan=DisaggPlan(n_microbatches=m, use_m2n=sc.use_m2n,
+                            use_kernels=sc.use_kernels,
                             profile_stages=sc.profile_stages),
             transport=transport)
         if sc.microbatches == "auto":
@@ -270,6 +271,10 @@ def main():
     ap.add_argument("--use-m2n", action="store_true",
                     help="route MoE layers through the shard_map M2N "
                          "dispatch (core.m2n) on the expert mesh")
+    ap.add_argument("--kernels", action="store_true", dest="use_kernels",
+                    help="run the decode hot path on the Pallas kernels "
+                         "(flash decode attention, fused gating+dispatch, "
+                         "grouped expert MLP); interpret mode off-TPU")
     ap.add_argument("--prefill-devices", type=int, default=0,
                     help="reserve N devices as a dedicated prefill "
                          "cluster (0 = inline prefill on the decode "

@@ -303,9 +303,16 @@ def apply_layer_seq(kind: str, p: dict, cfg: ModelConfig, x: jax.Array,
 
 def self_attn_decode_sublayer(p: dict, cfg: ModelConfig, x: jax.Array,
                               pos: jax.Array, cache: dict, window: int,
-                              prefix: str = "", ln: str = "ln1"):
+                              prefix: str = "", ln: str = "ln1",
+                              use_kernels: bool = False):
     """Decode-mode self-attention sublayer (shared with the disaggregated
-    runtime).  x: (B, d).  Returns (delta, new_kv_cache)."""
+    runtime).  x: (B, d).  Returns (delta, new_kv_cache).
+
+    ``use_kernels`` routes the attention read through the Pallas
+    flash-decode kernel (``kernels.decode_attention``) instead of the
+    jnp path; the jnp function stays the oracle, so the flag must be
+    threaded explicitly rather than swapped inside ``models.attention``.
+    """
     B, _ = x.shape
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     h = rms_norm(x, p[ln])
@@ -320,8 +327,14 @@ def self_attn_decode_sublayer(p: dict, cfg: ModelConfig, x: jax.Array,
     k_c = cache["k"].at[b_idx, slot].set(k.astype(cache["k"].dtype))
     v_c = cache["v"].at[b_idx, slot].set(v.astype(cache["v"].dtype))
     pos_c = cache["pos"].at[b_idx, slot].set(pos.astype(jnp.int32))
-    out = attn_lib.decode_attention(q, k_c, v_c, pos_c, pos, window=window,
+    if use_kernels:
+        from repro.kernels import ops as kops  # lazy: no module cycle
+        out = kops.decode_attention(q, k_c, v_c, pos_c, pos, window=window,
                                     attn_softcap=cfg.attn_softcap)
+    else:
+        out = attn_lib.decode_attention(q, k_c, v_c, pos_c, pos,
+                                        window=window,
+                                        attn_softcap=cfg.attn_softcap)
     delta = out.reshape(B, H * hd) @ p[prefix + "wo"]
     return _maybe_post(p, "ln1_post", delta, cfg), {"k": k_c, "v": v_c,
                                                     "pos": pos_c}
@@ -340,7 +353,8 @@ def ffn_decode_sublayer(p: dict, cfg: ModelConfig, x: jax.Array,
 
 
 def apply_layer_decode(kind: str, p: dict, cfg: ModelConfig, x: jax.Array,
-                       pos: jax.Array, cache: dict, capacity_mode: str):
+                       pos: jax.Array, cache: dict, capacity_mode: str,
+                       use_kernels: bool = False):
     """One layer for one token.  x: (B, d), pos: (B,) int32.
 
     Returns (x, new_cache_entry, aux)."""
@@ -350,7 +364,8 @@ def apply_layer_decode(kind: str, p: dict, cfg: ModelConfig, x: jax.Array,
 
     def self_attn_decode(p, x, cache, window, prefix="", ln="ln1"):
         return self_attn_decode_sublayer(p, cfg, x, pos, cache, window,
-                                         prefix=prefix, ln=ln)
+                                         prefix=prefix, ln=ln,
+                                         use_kernels=use_kernels)
 
     def ffn_decode(p, x):
         return ffn_decode_sublayer(p, cfg, x, capacity_mode)
@@ -606,7 +621,8 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, max_seq: int,
 
 
 def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
-                cache: dict, pos: jax.Array, capacity_mode: str = "full"):
+                cache: dict, pos: jax.Array, capacity_mode: str = "full",
+                use_kernels: bool = False):
     """One decode step.  tokens: (B,) int32, pos: (B,) int32.
 
     Returns (logits (B, V), new_cache)."""
@@ -618,7 +634,8 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
         new_caches = []
         for i, kind in enumerate(pattern):
             x, c, _ = apply_layer_decode(kind, bp[i], cfg, x, pos, bc[i],
-                                         capacity_mode)
+                                         capacity_mode,
+                                         use_kernels=use_kernels)
             new_caches.append(c)
         return x, tuple(new_caches)
 
@@ -629,7 +646,8 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
     new_rem = []
     for i, kind in enumerate(cfg.remainder_pattern):
         x, c, _ = apply_layer_decode(kind, params["remainder"][i], cfg, x, pos,
-                                     cache["remainder"][i], capacity_mode)
+                                     cache["remainder"][i], capacity_mode,
+                                     use_kernels=use_kernels)
         new_rem.append(c)
     new_cache = {"blocks": new_block_caches, "remainder": tuple(new_rem)}
     return _lm_head(params, cfg, x), new_cache

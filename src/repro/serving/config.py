@@ -42,6 +42,7 @@ class ServingConfig:
     # ---- decode runtime ------------------------------------------------
     microbatches: Union[int, str] = 3  # int, or "auto" (paper eq. 3)
     use_m2n: bool = False
+    use_kernels: bool = False          # Pallas hot-path kernels
     profile_stages: bool = False
     # ---- transport / clusters (paper §3-§4) ----------------------------
     transport: str = "inproc"          # inproc | simrdma | multi
@@ -96,7 +97,8 @@ class ServingConfig:
 
     # -------------------------------------------------------------- argparse
     # argparse dest -> config field, where the names differ
-    _ARG_ALIASES = {"requests": "n_requests", "reduced": "use_reduced"}
+    _ARG_ALIASES = {"requests": "n_requests", "reduced": "use_reduced",
+                    "kernels": "use_kernels"}
 
     @classmethod
     def from_args(cls, args: argparse.Namespace) -> "ServingConfig":

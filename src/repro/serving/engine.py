@@ -211,10 +211,17 @@ class Engine:
         self.running: Dict[int, Request] = {}
         self.finished: List[Request] = []
         self.key = jax.random.PRNGKey(seed)
+        # whether any decode path runs on the Pallas kernels: either the
+        # config asked for them (monolithic decode_step) or the runtime
+        # plan was built with them (pingpong / m2n)
+        self.use_kernels = bool(
+            base.use_kernels
+            or getattr(getattr(runtime, "plan", None), "use_kernels", False))
         # decode_fn(tokens, cache, pos) -> (logits, new_cache)
         self._decode = decode_fn or (
-            lambda toks, cache, pos: decode_step(self.params, cfg, toks,
-                                                 cache, pos))
+            lambda toks, cache, pos: decode_step(
+                self.params, cfg, toks, cache, pos,
+                use_kernels=base.use_kernels))
         self._last_token = [0] * max_batch
         self.n_decode_iters = 0
         self.n_prefills = 0
@@ -402,6 +409,7 @@ class Engine:
             "prefills": self.n_prefills,
             "mean_latency_s": sum(lat) / len(lat) if lat else 0.0,
             "mode": self.mode,
+            "use_kernels": self.use_kernels,
             "disagg_prefill": self.prefill_worker is not None,
         }
         # per-phase breakdown (host-issue wall time: the pipeline stays

@@ -14,12 +14,15 @@ Version history:
      stages + the §6 expert-balance report, no version field.
   2  — adds ``schema_version`` itself and the per-hop ``transport``
      section (per-kind hops/bytes/issue_s/sim_s from ``core.transport``).
+  3  — ``use_kernels`` joins the core payload (always present, so perf
+     baselines distinguish the Pallas hot path from the jnp path; a
+     semantic addition every entry must carry, hence the bump).
 """
 from __future__ import annotations
 
 from typing import List, TypedDict
 
-STATS_SCHEMA_VERSION = 2
+STATS_SCHEMA_VERSION = 3
 
 
 class PhaseStats(TypedDict, total=False):
@@ -67,6 +70,7 @@ class EngineStats(TypedDict, total=False):
     prefills: int
     mean_latency_s: float
     mode: str
+    use_kernels: bool
     disagg_prefill: bool
     phases: PhaseStats
     # ping-pong runtime only

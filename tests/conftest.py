@@ -1,0 +1,24 @@
+"""Shared test fixtures.
+
+The only fixture here keeps the suite alive on CPU jaxlib: every jit
+executable pins LLVM JIT code pages until the *Python* object dies, and
+a full-suite run accumulates thousands of them — eventually a large
+fresh compile (e.g. ``decode_step``'s scan in test_serving_training)
+segfaults inside ``backend_compile`` once ``vm.max_map_count`` is
+exhausted.  Dropping dead executables at module boundaries bounds the
+map count at roughly one module's worth; within a module the jit cache
+still works normally, so per-module wall time is unaffected.
+"""
+from __future__ import annotations
+
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_dead_jit_executables():
+    yield
+    gc.collect()
+    jax.clear_caches()

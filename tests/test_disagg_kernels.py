@@ -1,15 +1,23 @@
-"""Disaggregated runtime with the Pallas grouped-GEMM expert phase
-(§6 fused kernels as a first-class runtime option)."""
+"""Disaggregated runtime with the Pallas hot path (§6 fused kernels as
+a first-class runtime option): flash decode attention, fused
+gating+dispatch, and the grouped expert MLP must be token-parity with
+the jnp path in every runtime (monolithic / pingpong / m2n), including
+live expert placement and capacity drops."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.config import get_config, reduced
+from repro.core import load_balance as lb
 from repro.core.disagg import DisaggPlan, DisaggregatedInstance
 from repro.models import decode_step, init_params, prefill
 
+RTOL = ATOL = 5e-4
 
-def test_disagg_pallas_expert_phase_matches():
+
+@pytest.fixture(scope="module")
+def setup():
     cfg = reduced(get_config("mixtral-8x22b"))
     key = jax.random.PRNGKey(0)
     params = init_params(cfg, key)
@@ -19,10 +27,81 @@ def test_disagg_pallas_expert_phase_matches():
     nxt = jnp.argmax(jax.random.normal(key, (B, cfg.vocab)), -1)
     pos = jnp.full((B,), T, jnp.int32)
     want, _ = decode_step(params, cfg, nxt, cache, pos)
+    return cfg, params, cache, nxt, pos, want
 
+
+def _close(got, want):
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_disagg_pallas_expert_phase_matches(setup):
+    cfg, params, cache, nxt, pos, want = setup
     inst = DisaggregatedInstance(
         cfg, params, plan=DisaggPlan(n_microbatches=2, use_kernels=True))
     got, _ = inst.decode_step(nxt, cache, pos)
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32),
-                               rtol=5e-4, atol=5e-4)
+    _close(got, want)
+
+
+def test_monolithic_decode_step_kernels_token_parity(setup):
+    """Greedy decode on the kernel path emits the jnp path's tokens."""
+    cfg, params, cache, nxt, pos, _ = setup
+    c_j = c_k = cache
+    t_j = t_k = nxt
+    p = pos
+    for step in range(3):
+        lj, c_j = decode_step(params, cfg, t_j, c_j, p)
+        lk, c_k = decode_step(params, cfg, t_k, c_k, p, use_kernels=True)
+        _close(lk, lj)
+        t_j, t_k = jnp.argmax(lj, -1), jnp.argmax(lk, -1)
+        np.testing.assert_array_equal(np.asarray(t_j), np.asarray(t_k))
+        p = p + 1
+
+
+def test_m2n_pallas_dispatch_matches(setup):
+    """m2n shard path on kernels: fused owner-filtered gating_dispatch
+    + grouped MLP vs the plain decode_step oracle."""
+    cfg, params, cache, nxt, pos, want = setup
+    inst = DisaggregatedInstance(
+        cfg, params, plan=DisaggPlan(n_microbatches=2, use_m2n=True,
+                                     use_kernels=True))
+    got, _ = inst.decode_step(nxt, cache, pos)
+    _close(got, want)
+
+
+@pytest.mark.parametrize("use_m2n", [False, True])
+def test_capped_capacity_kernels_match_jnp(setup, use_m2n):
+    """capacity_mode='capped' (token drops): kernel and jnp paths must
+    drop the same tokens and agree on output."""
+    cfg, params, cache, nxt, pos, _ = setup
+    outs = []
+    for use_kernels in (False, True):
+        inst = DisaggregatedInstance(
+            cfg, params,
+            plan=DisaggPlan(n_microbatches=2, use_m2n=use_m2n,
+                            capacity_mode="capped",
+                            use_kernels=use_kernels))
+        out, _ = inst.decode_step(nxt, cache, pos)
+        outs.append(out)
+    _close(outs[1], outs[0])
+
+
+@pytest.mark.parametrize("use_m2n", [False, True])
+def test_live_placement_kernels_token_identical(setup, use_m2n):
+    """PR 3 composition: after a hot-expert rebalance (replicated
+    placement tables) the kernel dispatch stays token-identical."""
+    cfg, params, cache, nxt, pos, want = setup
+    inst = DisaggregatedInstance(
+        cfg, params, plan=DisaggPlan(n_microbatches=2, use_m2n=use_m2n,
+                                     use_kernels=True))
+    got, _ = inst.decode_step(nxt, cache, pos)
+    _close(got, want)
+    counts = inst.take_expert_counts()
+    hot = counts + np.array([80.0] + [0.0] * (cfg.moe.n_experts - 1))
+    inst.apply_placement(lb.balance_experts(hot, inst.n_expert_nodes))
+    got2, _ = inst.decode_step(nxt, cache, pos)
+    _close(got2, want)
+    # the traffic trace keeps accumulating through the kernel dispatch
+    B = int(nxt.shape[0])
+    assert inst.take_expert_counts().sum() == B * cfg.moe.top_k * cfg.n_layers

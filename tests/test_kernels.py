@@ -108,3 +108,101 @@ def test_decode_attention_long_blocked():
     got = ops.decode_attention(q, kc, vc, cache_pos, pos, wb=256)
     want = ref.decode_attention_ref(q, kc, vc, cache_pos, pos)
     assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- gating_dispatch
+def _dispatch_case(t, d, e, k, seed=0):
+    kx, kw = jax.random.split(jax.random.fold_in(KEY, seed + t + e))
+    x = jax.random.normal(kx, (t, d), jnp.float32)
+    w = jax.random.normal(kw, (d, e), jnp.float32)
+    return x, w
+
+
+def _assert_dispatch_equal(got, want):
+    gi, gg, gc = got
+    wi, wg, wc = want
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    assert_allclose(np.asarray(gg), np.asarray(wg), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(gc), np.asarray(wc), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("t,d,e,k", [
+    (8, 16, 4, 2), (256, 64, 8, 2), (96, 48, 16, 4),  # T off-tile too
+])
+def test_gating_dispatch_full(t, d, e, k):
+    """Drop-free ('full') capacity: kernel slot order must be identical
+    to the jnp route + dispatch_indices chain (first-come first-served,
+    token-major)."""
+    x, w = _dispatch_case(t, d, e, k)
+    got = ops.gating_dispatch(x, w, k, n_buckets=e, capacity=t)
+    want = ref.gating_dispatch_ref(x, w, k, e, t)
+    _assert_dispatch_equal(got, want)
+
+
+def test_gating_dispatch_capped_drops():
+    """capacity_mode='capped'-style overflow: tokens past an expert's
+    capacity are dropped in exactly the jnp oracle's order."""
+    t, d, e, k, cap = 128, 32, 4, 2, 8   # 128*2 slots >> 4*8 capacity
+    x, w = _dispatch_case(t, d, e, k, seed=7)
+    got = ops.gating_dispatch(x, w, k, n_buckets=e, capacity=cap)
+    want = ref.gating_dispatch_ref(x, w, k, e, cap)
+    _assert_dispatch_equal(got, want)
+    # drops really happened: the sentinel row index t marks empty slots,
+    # and fewer than t*k slots survived
+    kept = int(np.sum(np.asarray(got[0]) < t))
+    assert kept < t * k
+    assert kept == e * cap  # heavily oversubscribed: every bucket full
+
+
+def test_gating_dispatch_bias_and_weights():
+    """Router bias shifts selection; count_weights mask idle rows out of
+    the traffic trace (both flow through the kernel)."""
+    t, d, e, k = 64, 32, 8, 2
+    x, w = _dispatch_case(t, d, e, k, seed=3)
+    bias = jnp.linspace(-1.0, 1.0, e)
+    cw = (jnp.arange(t) % 2).astype(jnp.float32)
+    got = ops.gating_dispatch(x, w, k, n_buckets=e, capacity=t,
+                              bias=bias, count_weights=cw)
+    want = ref.gating_dispatch_ref(x, w, k, e, t, bias=bias,
+                                   count_weights=cw)
+    _assert_dispatch_equal(got, want)
+    assert float(got[2].sum()) == pytest.approx(float(cw.sum()) * k)
+
+
+@pytest.mark.parametrize("owner", [0, 1, 3])
+def test_gating_dispatch_owner_filter(owner):
+    """m2n shard-local dispatch: only tokens routed to the owner's
+    contiguous expert block land in the (local) buffers."""
+    t, d, e, k, shards = 64, 32, 8, 2, 4
+    e_loc = e // shards
+    x, w = _dispatch_case(t, d, e, k, seed=11)
+    got = ops.gating_dispatch(x, w, k, n_buckets=e, capacity=16,
+                              owner=owner, slots_per_node=e_loc)
+    want = ref.gating_dispatch_ref(x, w, k, e, 16, owner=owner,
+                                   slots_per_node=e_loc)
+    _assert_dispatch_equal(got, want)
+    assert got[0].shape == (e_loc, 16)
+
+
+@pytest.mark.parametrize("owner", [None, 0, 2])
+def test_gating_dispatch_placement_tables(owner):
+    """Live-placement dispatch: hot-expert replicas are picked by the
+    token-index hash; kernel must match replica_assign bit-for-bit."""
+    from repro.core import load_balance as lb
+    t, d, e, k, nodes, S = 96, 32, 8, 2, 4, 4
+    x, w = _dispatch_case(t, d, e, k, seed=5)
+    # hot expert 0 -> replicated placement
+    tbl = lb.placement_tables(
+        lb.balance_experts([100.0] + [4.0] * (e - 1), nodes), S)
+    assert tbl.rep_node.shape[1] > 1  # replication actually happened
+    tk = dict(rep_node=jnp.asarray(tbl.rep_node),
+              rep_slot=jnp.asarray(tbl.rep_slot),
+              rep_cum=jnp.asarray(tbl.rep_cum))
+    kw = dict(slots_per_node=S, **tk)
+    if owner is not None:
+        kw["owner"] = owner
+    got = ops.gating_dispatch(x, w, k, n_buckets=nodes * S, capacity=12,
+                              **kw)
+    want = ref.gating_dispatch_ref(x, w, k, nodes * S, 12,
+                                   owner=owner, slots_per_node=S, **tk)
+    _assert_dispatch_equal(got, want)

@@ -186,6 +186,53 @@ print("REBALANCE-8DEV-OK static_imb=%.2f rebal_imb=%.2f" %
     assert "REBALANCE-8DEV-OK" in out
 
 
+def test_kernel_path_8_devices_token_identical():
+    """Kernel-path acceptance: on the 4 attention + 4 expert split with
+    a zipf-skewed router, the Pallas hot path (flash decode attention,
+    fused gating+dispatch, grouped expert MLP) composed with m2n AND
+    live expert rebalancing (placement tables) emits exactly the jnp
+    static engine's tokens, and stats record the kernel mode."""
+    out = run_sub("""
+import jax, numpy as np
+assert jax.device_count() == 8, jax.device_count()
+from repro.config import get_config, reduced
+from repro.core.disagg import DisaggPlan, DisaggregatedInstance
+from repro.launch.serve import _inject_router_bias, zipf_router_bias
+from repro.models import init_params
+from repro.serving.engine import Engine, Request
+cfg = reduced(get_config("mixtral-8x22b"))
+params = init_params(cfg, jax.random.PRNGKey(0))
+params = _inject_router_bias(params, cfg,
+                             zipf_router_bias(cfg.moe.n_experts, 1.2))
+rng = np.random.RandomState(0)
+prompts = [rng.randint(2, cfg.vocab, size=rng.randint(2, 8)).tolist()
+           for _ in range(5)]
+devs = jax.devices()
+def serve(use_m2n=False, use_kernels=False, **kw):
+    inst = DisaggregatedInstance(cfg, params, attn_devices=devs[:4],
+                                 expert_devices=devs[4:],
+                                 plan=DisaggPlan(n_microbatches=2,
+                                                 use_m2n=use_m2n,
+                                                 use_kernels=use_kernels))
+    eng = Engine(cfg, params, max_batch=4, max_seq=64, mode="pingpong",
+                 runtime=inst, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    return {r.rid: r.generated for r in eng.run_until_done()}, eng.stats()
+ref_toks, ref_stats = serve()
+assert ref_stats["use_kernels"] is False
+for use_m2n in (False, True):
+    toks, stats = serve(use_m2n=use_m2n, use_kernels=True,
+                        expert_rebalance_every=2)
+    assert toks == ref_toks, (use_m2n, toks, ref_toks)
+    assert stats["use_kernels"] is True
+    assert stats["rebalances"] > 0
+    assert stats["replicated_experts"] >= 1, stats
+print("KERNELS-8DEV-OK")
+""")
+    assert "KERNELS-8DEV-OK" in out
+
+
 def test_m2n_sharded_dispatch_2x4_mesh():
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np
