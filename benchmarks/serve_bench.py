@@ -60,6 +60,16 @@ CONFIGS = (
     # so the kernel path can't silently rot (parity is asserted by
     # tests/test_disagg_kernels.py / test_multidevice.py)
     ("pingpong_kernels", {"use_kernels": True}),
+    # the PR-6 tentpole: paged KV layout — engine-level gather/write-back
+    # over a refcounted page pool.  Random prompts, so the radix tree
+    # only ever misses; this entry prices the paging overhead itself
+    ("pingpong_paged", {"kv_layout": "paged", "page_size": 8}),
+    # shared-system-prompt workload (24 of 32 prompt tokens shared):
+    # radix prefix hits skip re-prefilling the shared pages — the
+    # entry's prefix_cache section records the hit rate and the phases
+    # section the shrunken prefill
+    ("pingpong_prefix_shared", {"kv_layout": "paged", "page_size": 8,
+                                "prompt_len": 32, "shared_prefix_len": 24}),
 )
 
 PHASE_KEYS = ("prefill_s", "transfer_s", "decode_s", "prefills",
@@ -78,9 +88,9 @@ WORKLOAD = dict(use_reduced=True, n_requests=6, max_new=4, max_batch=4,
 
 def _serve_once(name: str, extra: dict) -> dict:
     runtime = "pingpong" if name.startswith("pingpong") else name
+    kw = {**WORKLOAD, **extra}      # entries may override workload knobs
     try:
-        return serve_run("mixtral-8x22b", runtime=runtime, **WORKLOAD,
-                         **extra)
+        return serve_run("mixtral-8x22b", runtime=runtime, **kw)
     finally:
         # every run builds a fresh engine/runtime (per-instance jits;
         # warmup_requests absorbs the recompile before timing), so
@@ -96,7 +106,12 @@ def _entry(best: dict, runs: list) -> dict:
     entry = {k: best[k] for k in ("tokens", "decode_iters", "wall_s",
                                   "decode_tok_per_s", "finished")}
     entry["use_kernels"] = bool(best.get("use_kernels", False))
+    entry["kv_layout"] = best.get("kv_layout", "contiguous")
     entry["tok_per_s_runs"] = runs
+    # paged layout: page-pool occupancy + radix hit/miss accounting
+    for section in ("kv_pages", "prefix_cache"):
+        if section in best:
+            entry[section] = best[section]
     entry["phases"] = {k: best["phases"][k] for k in PHASE_KEYS
                        if k in best["phases"]}
     entry.update({k: best[k] for k in BALANCE_KEYS if k in best})

@@ -114,6 +114,15 @@ class Transport(abc.ABC):
         """Prefill->decode KV hop: one request's cache rows."""
         return self.send(request_kv, sharding, kind="kv", sync=sync)
 
+    def migrate_pages(self, page_chunk, sharding, *,
+                      sync: bool = False) -> TransportHandle:
+        """Page-granular prefill->decode KV hop: one fixed-size page's
+        worth of cache across all layers (paged KV layout).  Same wire
+        kind as ``migrate_kv`` — the ledger sees one "kv" hop *per
+        page*, so bytes scale with pages actually moved, not with the
+        request's reserved row."""
+        return self.send(page_chunk, sharding, kind="kv", sync=sync)
+
     def regather_weights(self, tree, sharding, *,
                          fanout: int = 1) -> TransportHandle:
         """Expert-weight regather (live placement / param upload)."""

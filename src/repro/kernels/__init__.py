@@ -7,7 +7,8 @@ use ``from repro.kernels import grouped_mlp`` (or ``ops.grouped_mlp``)
 rather than deep-importing the per-kernel modules.
 """
 from repro.kernels.ops import (decode_attention, gating_dispatch,
-                               gating_topk, grouped_matmul, grouped_mlp)
+                               gating_topk, grouped_matmul, grouped_mlp,
+                               paged_decode_attention)
 
 __all__ = ["decode_attention", "gating_dispatch", "gating_topk",
-           "grouped_matmul", "grouped_mlp"]
+           "grouped_matmul", "grouped_mlp", "paged_decode_attention"]

@@ -103,3 +103,114 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         interpret=interpret,
     )(qg, k_cache, v_cache, cache_pos, pos)
     return out.reshape(B, H, hd)
+
+
+def _paged_kernel(bt_ref, q_ref, k_ref, v_ref, ppos_ref, pos_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, nw: int, window: int,
+                  attn_softcap: float, scale: float):
+    b = pl.program_id(0)
+    w_step = pl.program_id(2)
+
+    @pl.when(w_step == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (rep, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # (ps, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if attn_softcap > 0.0:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    cpos = ppos_ref[0]                                     # (ps,)
+    pos = pos_ref[0]
+    # an unmapped logical page (-1 in the block table) was DMA'd from
+    # clipped page 0 — mask the whole block so its garbage never scores
+    mapped = bt_ref[b, w_step] >= 0
+    ok = mapped & (cpos >= 0) & (cpos <= pos)
+    if window > 0:
+        ok &= cpos > (pos - window)
+    s = jnp.where(ok[None, :], s, -1e30)
+
+    m_old = m_ref[:, 0]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new[:, None]) * ok[None, :].astype(jnp.float32)
+    l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[:, 0] = m_new
+    l_ref[:, 0] = l_new
+
+    @pl.when(w_step == nw - 1)
+    def _():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "attn_softcap", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, pos_pages: jax.Array,
+                           block_table: jax.Array, pos: jax.Array, *,
+                           window: int = 0, attn_softcap: float = 0.0,
+                           interpret: bool = True) -> jax.Array:
+    """Block-table-indexed flash decode over a paged KV pool.
+
+    q: (B, H, hd); k_pages/v_pages: (P, ps, Hkv, hd); pos_pages: (P, ps);
+    block_table: (B, n_logical) int32, -1 = unmapped; pos: (B,).
+    Returns (B, H, hd).
+
+    The block table rides in as a scalar-prefetch argument
+    (``pltpu.PrefetchScalarGridSpec``), so each KV block's DMA source
+    address is *computed from the table* in the BlockSpec index_map —
+    the kernel streams exactly the pages a request owns straight out of
+    the shared pool, with no dense gather materialized in HBM.  Grid is
+    (B, Hkv, n_logical) with the page dimension innermost, same online
+    softmax as the contiguous kernel; unmapped pages (clipped to page 0
+    for the DMA) are masked out in-kernel via the prefetched table.
+    """
+    B, H, hd = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    n_logical = block_table.shape[1]
+    rep = H // Hkv
+    qg = q.reshape(B, Hkv, rep, hd)
+    bt = jnp.asarray(block_table, jnp.int32)
+    grid = (B, Hkv, n_logical)
+
+    def page_of(b, w, bt):
+        # unmapped (-1) entries DMA page 0; the kernel masks them via
+        # the same prefetched (unclipped) table
+        return jnp.maximum(bt[b, w], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b, g, w, bt: (b, g, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, g, w, bt: (page_of(b, w, bt), 0, g, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, g, w, bt: (page_of(b, w, bt), 0, g, 0)),
+            pl.BlockSpec((1, ps), lambda b, g, w, bt: (page_of(b, w, bt), 0)),
+            pl.BlockSpec((1,), lambda b, g, w, bt: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda b, g, w, bt: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, nw=n_logical, window=window,
+                          attn_softcap=attn_softcap, scale=hd ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        interpret=interpret,
+    )(bt, qg, k_pages, v_pages, pos_pages, pos)
+    return out.reshape(B, H, hd)

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.decode_attention import (
+    paged_decode_attention as _paged_decode_attention)
 from repro.kernels.gating_topk import gating_dispatch as _gating_dispatch
 from repro.kernels.gating_topk import gating_topk as _gating_topk
 from repro.kernels.grouped_matmul import grouped_matmul as _grouped_matmul
@@ -47,6 +49,16 @@ def gating_dispatch(x, w_router, top_k, n_buckets, capacity, **kw):
 def decode_attention(q, k_cache, v_cache, cache_pos, pos, **kw):
     kw.setdefault("interpret", _default_interpret())
     return _decode_attention(q, k_cache, v_cache, cache_pos, pos, **kw)
+
+
+def paged_decode_attention(q, k_pages, v_pages, pos_pages, block_table,
+                           pos, **kw):
+    """Block-table-indexed decode attention over a paged KV pool (the
+    paged-layout analogue of ``decode_attention``; see
+    ``kernels.decode_attention.paged_decode_attention``)."""
+    kw.setdefault("interpret", _default_interpret())
+    return _paged_decode_attention(q, k_pages, v_pages, pos_pages,
+                                   block_table, pos, **kw)
 
 
 def grouped_mlp(xe, w1, w3, w2, act: str = "silu", row_valid=None, **kw):

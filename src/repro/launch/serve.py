@@ -185,24 +185,41 @@ def run(arch: Optional[str] = None, *,
 
     if prefill_devs:
         engine_kw.update(
-            prefill_worker=PrefillWorker(cfg, params, prefill_devs,
-                                         max_seq=sc.max_seq,
-                                         chunk_tokens=sc.prefill_chunk_tokens),
+            prefill_worker=PrefillWorker(
+                cfg, params, prefill_devs, max_seq=sc.max_seq,
+                chunk_tokens=sc.prefill_chunk_tokens,
+                page_size=sc.page_size if sc.kv_layout == "paged" else 0),
             kv_sharding=inst.kv_sharding if inst is not None else None)
 
     eng = Engine(cfg, params, config=sc, transport=transport, **engine_kw)
     rng = np.random.RandomState(sc.seed)
+    # shared-system-prompt workload: every request opens with the same
+    # ``shared_prefix_len`` tokens (the pattern the radix prefix cache
+    # deduplicates) followed by a per-request random suffix
+    shared_prefix = (rng.randint(2, cfg.vocab,
+                                 size=sc.shared_prefix_len).tolist()
+                     if sc.shared_prefix_len else [])
+
+    def make_prompt(plen: int) -> list:
+        if shared_prefix:
+            if plen <= len(shared_prefix):
+                raise ValueError(f"prompt_len {plen} must exceed "
+                                 f"shared_prefix_len {len(shared_prefix)}")
+            tail = rng.randint(2, cfg.vocab,
+                               size=plen - len(shared_prefix)).tolist()
+            return shared_prefix + tail
+        return rng.randint(2, cfg.vocab, size=plen).tolist()
+
     if sc.warmup_requests:
         for i in range(sc.warmup_requests):
             plen = sc.prompt_len or 8
-            prompt = rng.randint(2, cfg.vocab, size=plen).tolist()
-            eng.submit(Request(rid=-1 - i, prompt=prompt, max_new_tokens=2))
+            eng.submit(Request(rid=-1 - i, prompt=make_prompt(plen),
+                               max_new_tokens=2))
         eng.run_until_done()
     pre = eng.stats()
     for i in range(sc.n_requests):
         plen = sc.prompt_len or int(rng.randint(2, sc.max_seq // 4))
-        prompt = rng.randint(2, cfg.vocab, size=plen).tolist()
-        eng.submit(Request(rid=i, prompt=prompt,
+        eng.submit(Request(rid=i, prompt=make_prompt(plen),
                            max_new_tokens=sc.max_new))
     t0 = time.perf_counter()
     eng.run_until_done()
@@ -230,6 +247,18 @@ def run(arch: Optional[str] = None, *,
         if isinstance(hop, dict) and kind in pre_tr:
             for k in hop:
                 hop[k] -= pre_tr[kind].get(k, 0)
+    # prefix-cache counters are cumulative too (warmup may legitimately
+    # seed the radix tree — only the measured phase's hits count)
+    if "prefix_cache" in stats:
+        pre_px = pre.get("prefix_cache", {})
+        for k in ("hits", "misses", "hit_tokens", "evictions", "inserts"):
+            stats["prefix_cache"][k] -= pre_px.get(k, 0)
+        tot = stats["prefix_cache"]["hits"] + stats["prefix_cache"]["misses"]
+        stats["prefix_cache"]["hit_rate"] = (
+            stats["prefix_cache"]["hits"] / tot if tot else 0.0)
+    if "kv_pages" in stats:
+        for k in ("allocs", "forks", "released"):
+            stats["kv_pages"][k] -= pre.get("kv_pages", {}).get(k, 0)
     stats["wall_s"] = dt
     stats["decode_tok_per_s"] = stats["tokens"] / dt
     if sc.verbose:
@@ -241,6 +270,17 @@ def run(arch: Optional[str] = None, *,
               f"{stats['decode_iters']} decode iters)")
         print(_format_phases(stats["phases"]))
         print(_format_transport(stats["transport"]))
+        if "kv_pages" in stats:
+            kp = stats["kv_pages"]
+            line = (f"kv[paged]: {kp['used']}/{kp['n_pages']} pages of "
+                    f"{kp['page_size']} (high-water {kp['high_water']}, "
+                    f"{kp['allocs']} allocs, {kp['forks']} COW forks)")
+            if "prefix_cache" in stats:
+                px = stats["prefix_cache"]
+                line += (f" | prefix: {px['hits']} hits / {px['misses']} "
+                         f"misses ({px['hit_tokens']} tokens reused, "
+                         f"{px['evictions']} evicted)")
+            print(line)
         if "stages" in stats:
             print(_format_stages(stats["stages"]))
         if "imbalance" in stats:
@@ -311,6 +351,28 @@ def main():
                          "same movement + per-hop RDMA cost model, "
                          "multi = jax.distributed multi-controller "
                          "(coordinator/rank from REPRO_* env vars)")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=("contiguous", "paged"),
+                    help="KV-cache layout: contiguous = one (B, W) ring-"
+                         "buffer row per request; paged = block tables "
+                         "over a refcounted fixed-size page pool "
+                         "(serving.pages) with radix prefix reuse")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="token slots per KV page (paged layout; must "
+                         "divide --max-seq)")
+    ap.add_argument("--kv-pool-pages", type=int, default=0,
+                    help="page-pool size (0 = auto from "
+                         "max_batch/max_seq)")
+    ap.add_argument("--prefix-cache",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="radix prefix cache over the page pool: "
+                         "requests sharing a prompt prefix reuse its KV "
+                         "pages instead of recomputing (paged layout "
+                         "only)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="workload knob: every prompt opens with the "
+                         "same N tokens (shared-system-prompt scenario; "
+                         "0 = fully random prompts)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)

@@ -98,6 +98,39 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return _grouped_out(p, v_cache, q.dtype)[:, 0]
 
 
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, pos_pages: jax.Array,
+                           block_table: jax.Array, pos: jax.Array, *,
+                           window: int = 0, attn_softcap: float = 0.0,
+                           scale: float | None = None) -> jax.Array:
+    """Single-token attention reading KV through a block table.
+
+    The paged KV layout stores pages of ``ps`` slots in a shared pool;
+    each request's logical ring buffer is the concatenation of the
+    pages its block table names.  This gathers those pages into the
+    dense (B, W) view and runs ``decode_attention`` — bit-identical to
+    the contiguous path because the gather is a pure copy (unmapped
+    logical pages read with ``cache_pos = -1``, i.e. masked exactly
+    like unwritten slots).
+
+    q: (B, H, hd); k_pages/v_pages: (P, ps, Hkv, hd);
+    pos_pages: (P, ps) absolute position per pool slot (-1 = empty);
+    block_table: (B, n_logical) physical page per logical page
+    (-1 = unmapped); pos: (B,) query positions.  Returns (B, H, hd).
+    """
+    B, n_logical = block_table.shape
+    ps = k_pages.shape[1]
+    W = n_logical * ps
+    bt = jnp.maximum(block_table, 0)
+    k_cache = k_pages[bt].reshape(B, W, *k_pages.shape[2:])
+    v_cache = v_pages[bt].reshape(B, W, *v_pages.shape[2:])
+    mapped = (block_table >= 0)[:, :, None]
+    cache_pos = jnp.where(mapped, pos_pages[bt], -1).reshape(B, W)
+    return decode_attention(q, k_cache, v_cache, cache_pos, pos,
+                            window=window, attn_softcap=attn_softcap,
+                            scale=scale)
+
+
 def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     scale: float | None = None) -> jax.Array:
     """Full (non-causal, unmasked) attention to static source embeddings.

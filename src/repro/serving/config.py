@@ -18,6 +18,7 @@ from repro.serving.sampler import SamplingParams
 RUNTIMES = ("monolithic", "disagg", "pingpong")
 TRANSFERS = ("sync", "async")
 ENGINE_MODES = ("monolithic", "pingpong")
+KV_LAYOUTS = ("contiguous", "paged")
 
 
 @dataclass
@@ -49,6 +50,12 @@ class ServingConfig:
     prefill_devices: int = 0
     transfer: str = "async"            # KV migration: sync | async
     prefill_chunk_tokens: int = 512
+    # ---- KV cache layout (paged subsystem) ------------------------------
+    kv_layout: str = "contiguous"      # contiguous | paged
+    page_size: int = 16                # token slots per KV page (paged)
+    kv_pool_pages: int = 0             # 0 = auto-size from max_batch/max_seq
+    prefix_cache: bool = True          # radix prefix reuse (paged only)
+    shared_prefix_len: int = 0         # workload: shared system-prompt tokens
     # ---- engine ---------------------------------------------------------
     max_batch: int = 4
     max_seq: int = 128
@@ -76,7 +83,26 @@ class ServingConfig:
                              f"{sorted(TRANSPORTS)}, got {self.transport!r}")
         if self.microbatches != "auto":
             self.microbatches = int(self.microbatches)
+        if self.kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}, "
+                             f"got {self.kv_layout!r}")
+        if self.kv_layout == "paged":
+            if self.page_size <= 0:
+                raise ValueError(f"page_size must be positive, "
+                                 f"got {self.page_size}")
+            if self.max_seq % self.page_size:
+                raise ValueError(f"max_seq={self.max_seq} must be a whole "
+                                 f"number of pages of {self.page_size}")
         return self
+
+    @property
+    def n_pool_pages(self) -> int:
+        """Page-pool size: explicit, or auto — enough for every batch
+        row plus two spare rows' worth of pages so the prefix cache can
+        retain recently finished chains without starving admission."""
+        if self.kv_pool_pages:
+            return self.kv_pool_pages
+        return (self.max_batch + 2) * (self.max_seq // self.page_size)
 
     # ----------------------------------------------------------- projections
     @property

@@ -46,7 +46,10 @@ from repro.models.stubs import extra_inputs
 from repro.serving.config import ServingConfig
 from repro.serving.kvcache import (MicrobatchSlotAllocator, SlotAllocator,
                                    insert_rows, mb_slot_ranges, migrate_kv,
-                                   reset_row)
+                                   migrate_pages, reset_row)
+from repro.serving.pages import PagePool, n_pages_for
+from repro.serving.prefill import suffix_prefill
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import SamplingParams, sample, sample_rows
 from repro.serving.stats import STATS_SCHEMA_VERSION, EngineStats
 
@@ -99,7 +102,7 @@ class Engine:
                  expert_rebalance_every=_UNSET,
                  expert_replication=_UNSET,
                  expert_window=_UNSET,
-                 transport=None):
+                 transport=None, page_pool=None, prefix_cache=None):
         """``config``: the canonical way to set every scalar knob — a
         ``serving.config.ServingConfig``.  The scalar kwargs listed in
         ``_DEPRECATED_SCALARS`` are deprecated aliases kept for one
@@ -199,7 +202,37 @@ class Engine:
         self.sampling = sampling
         self.mode = mode
         self.runtime = runtime
-        self.cache = init_cache(cfg, max_batch, max_seq, dtype)
+        # KV layout: contiguous (one dense (B, W) ring-buffer row per
+        # slot) or paged (rows are virtual — per-request block tables
+        # over a refcounted page pool; the dense view is gathered per
+        # decode step and the new token scattered back, so the decode
+        # computation itself is layout-agnostic and token-identical)
+        self.kv_layout = base.kv_layout
+        if self.kv_layout == "paged":
+            self.page_pool = page_pool if page_pool is not None else PagePool(
+                cfg, n_pages=base.n_pool_pages, page_size=base.page_size,
+                max_seq=max_seq, dtype=dtype)
+            if prefix_cache is not None:
+                self.prefix = prefix_cache
+            else:
+                self.prefix = (PrefixCache(self.page_pool)
+                               if base.prefix_cache else None)
+            self.cache = None           # gathered from the pool per step
+            self.block_tables: Dict[int, List[int]] = {}   # rid -> pages
+            self._page_reserve: Dict[int, int] = {}        # rid -> unspent
+        else:
+            self.page_pool = None
+            self.prefix = None
+            self.cache = init_cache(cfg, max_batch, max_seq, dtype)
+        # paged disaggregated prefill shares one pool/prefix tree with
+        # the worker (single-process: the transport hop still prices the
+        # page movement onto the decode placement)
+        if self.page_pool is not None and prefill_worker is not None \
+                and getattr(prefill_worker, "page_size", 0):
+            if prefill_worker.page_pool is None:
+                prefill_worker.page_pool = self.page_pool
+            if prefill_worker.prefix_cache is None and self.prefix is not None:
+                prefill_worker.prefix_cache = self.prefix
         if mode == "pingpong":
             m = n_microbatches or runtime.plan.n_microbatches
             self.mb_slices = mb_slot_ranges(max_batch, m)
@@ -262,7 +295,135 @@ class Engine:
         self.running[req.rid] = req
         self.n_prefills += 1
 
+    # --------------------------------------------------------- paged helpers
+    def _pages_for_request(self, req: Request) -> int:
+        """Worst-case pages a request can ever touch: its prompt plus
+        all generated tokens, clamped at the ring-buffer width (wrapped
+        writes land in already-owned pages — or fork shared ones, which
+        the clamp also covers since every logical page is counted)."""
+        n_slots = min(self.max_seq, len(req.prompt) + req.max_new_tokens)
+        return n_pages_for(n_slots, self.page_pool.page_size)
+
+    def _reserve_pages(self, rid: int, n: int) -> bool:
+        """OOM-safe admission: reserve the request's worst case up
+        front, evicting cold prefix-cache pages if the free list is
+        short.  On False the request stays waiting (head-of-line — FIFO
+        admission order is part of the parity contract)."""
+        if not self.page_pool.reserve(n):
+            if self.prefix is None:
+                return False
+            self.prefix.evict(n - self.page_pool.available)
+            if not self.page_pool.reserve(n):
+                return False
+        self._page_reserve[rid] = n
+        return True
+
+    def _take_page(self, rid: int) -> int:
+        """Allocate one page against the request's reservation."""
+        left = self._page_reserve.get(rid, 0)
+        if left > 0:
+            self._page_reserve[rid] = left - 1
+            return self.page_pool.alloc(from_reserve=True)
+        return self.page_pool.alloc()
+
+    def _fork_page(self, rid: int, page: int) -> int:
+        """Copy-on-write a shared page, spending reservation if any."""
+        left = self._page_reserve.get(rid, 0)
+        if left > 0:
+            self._page_reserve[rid] = left - 1
+            return self.page_pool.fork(page, from_reserve=True)
+        return self.page_pool.fork(page)
+
+    def _install_pages(self, req: Request, shared: List[int],
+                       fresh: List[int]):
+        """Final admission bookkeeping shared by the inline and
+        disaggregated paged paths: the block table owns one reference
+        per page (the lookup pin for shared pages, the alloc reference
+        for fresh ones) and full prompt pages are published to the
+        radix tree."""
+        table = list(shared) + list(fresh)
+        self.block_tables[req.rid] = table
+        if self.prefix is not None:
+            self.prefix.insert(req.prompt, table)
+
+    def _admit_paged(self):
+        """Inline paged admission: prefix-aware prefill straight into
+        freshly allocated pages.  A radix hit gathers the shared pages
+        and computes only the suffix (decode starts at the fork point).
+        """
+        ps = self.page_pool.page_size
+        while self.waiting and self.slots.free:
+            req = self.waiting[0]
+            h, shared = ((self.prefix.lookup(req.prompt)
+                          if self.prefix is not None else (0, [])))
+            needed = self._pages_for_request(req) - len(shared)
+            if not self._reserve_pages(req.rid, needed):
+                for p in shared:        # drop the lookup pins
+                    self.page_pool.release(p)
+                break
+            self.waiting.pop(0)
+            slot = self.slots.alloc(req.rid)
+            t0 = time.perf_counter()
+            if h:
+                row = self.page_pool.gather_row(shared)
+                last_logits, row = suffix_prefill(
+                    self.params, self.cfg, req.prompt, row, h)
+            else:
+                toks = jnp.asarray([req.prompt], jnp.int32)
+                extras = extra_inputs(self.cfg, 1)
+                last_logits, row = prefill(self.params, self.cfg, toks,
+                                           max_seq=self.max_seq, **extras)
+            self.t_prefill += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            n_written = n_pages_for(len(req.prompt), ps)
+            fresh = [self._take_page(req.rid)
+                     for _ in range(n_written - len(shared))]
+            if fresh:
+                self.page_pool.write_row_span(fresh, row, len(shared) * ps,
+                                              len(req.prompt))
+            self.t_transfer += time.perf_counter() - t0
+            self.n_transfers += 1
+            self._install_pages(req, shared, fresh)
+            self._start_request(req, slot, last_logits)
+
+    def _admit_paged_from_transfer_queue(self):
+        """Disaggregated paged admission: the worker emits per-page
+        chunks; only the non-shared pages cross the prefill->decode
+        boundary (``kvcache.migrate_pages``, one "kv" hop per page)."""
+        w = self.prefill_worker
+        while self.waiting:
+            w.submit(self.waiting.pop(0))
+        lookahead = len(self.slots.free) + self.max_batch
+        while w.pending_count and w.ready_count < lookahead:
+            w.pump(max_batches=1)
+        while self.slots.free and w.ready_count:
+            res = w.pop()
+            req = res.request
+            shared = list(res.shared_pages)
+            needed = self._pages_for_request(req) - len(shared)
+            if not self._reserve_pages(req.rid, needed):
+                w.ready.appendleft(res)     # keep FIFO order; retry later
+                break
+            slot = self.slots.alloc(req.rid)
+            fresh = [self._take_page(req.rid)
+                     for _ in range(len(res.page_chunks))]
+            t0 = time.perf_counter()
+            migrate_pages(self.page_pool, res.page_chunks, fresh,
+                          sharding=self.kv_sharding,
+                          sync=self.transfer == "sync",
+                          transport=self.transport)
+            self.t_transfer += time.perf_counter() - t0
+            self.n_transfers += 1
+            self._install_pages(req, shared, fresh)
+            self._start_request(req, slot, res.last_logits)
+
     def _admit(self):
+        if self.kv_layout == "paged":
+            if self.prefill_worker is not None:
+                self._admit_paged_from_transfer_queue()
+            else:
+                self._admit_paged()
+            return
         if self.prefill_worker is not None:
             self._admit_from_transfer_queue()
             return
@@ -330,10 +491,52 @@ class Engine:
             req = self.running.pop(rid)
             req.t_done = time.perf_counter()
             slot = self.slots.release(rid)
-            # invalidate the freed KV row before any reuse: a recycled
-            # slot must never expose the previous request's cache state
-            self.cache = reset_row(self.cache, self.cfg, slot, self.max_seq)
+            if self.kv_layout == "paged":
+                # drop the table's references; pages the radix tree (or
+                # another request) still holds stay alive — everything
+                # else returns to the free list.  No reset needed: a
+                # recycled page is invalidated (pos = -1) on alloc.
+                for p in self.block_tables.pop(rid):
+                    self.page_pool.release(p)
+                left = self._page_reserve.pop(rid, 0)
+                if left:
+                    self.page_pool.unreserve(left)
+            else:
+                # invalidate the freed KV row before any reuse: a
+                # recycled slot must never expose the previous
+                # request's cache state
+                self.cache = reset_row(self.cache, self.cfg, slot,
+                                       self.max_seq)
             self.finished.append(req)
+
+    def _paged_writeback(self, dense_cache):
+        """Scatter this iteration's newly written KV token per live row
+        back into its physical page (one batched scatter per leaf).
+
+        The decode step wrote each row's token at ring slot
+        ``(position - 1) % W`` of the gathered dense view; the page
+        holding that slot is grown lazily from the request's
+        reservation, and forked first if it is shared (copy-on-write:
+        ring-buffer wrap is the one legal write into a prefix-cache /
+        multi-holder page)."""
+        pool, ps = self.page_pool, self.page_pool.page_size
+        rows, slots, pages, offs = [], [], [], []
+        for req in self.running.values():
+            w = (req.position - 1) % self.max_seq
+            lp = w // ps
+            tb = self.block_tables[req.rid]
+            if lp == len(tb):
+                tb.append(self._take_page(req.rid))
+            elif pool.is_shared(tb[lp]):
+                tb[lp] = self._fork_page(req.rid, tb[lp])
+            rows.append(req.slot)
+            slots.append(w)
+            pages.append(tb[lp])
+            offs.append(w % ps)
+        pool.write_tokens(dense_cache, np.asarray(rows, np.int32),
+                          np.asarray(slots, np.int32),
+                          np.asarray(pages, np.int32),
+                          np.asarray(offs, np.int32))
 
     # ----------------------------------------------------------------- step
     def step(self) -> int:
@@ -358,11 +561,29 @@ class Engine:
                 active[req.slot] = 1.0
             self.runtime.set_active_slots(active)
         t0 = time.perf_counter()
-        if self.mode == "pingpong":
-            logits, self.cache = self.runtime.decode_microbatched(
-                toks, self.cache, pos, self.mb_slices)
+        if self.kv_layout == "paged":
+            # block-table gather: materialize the dense (B, W) view the
+            # decode step expects.  The gather is a pure copy (unmapped
+            # pages read as pos=-1, exactly a reset row), so the decode
+            # computation below is bit-identical to the contiguous
+            # layout's across all runtimes and kernels.
+            bt = np.full((self.max_batch, self.page_pool.n_logical), -1,
+                         np.int32)
+            for req in self.running.values():
+                tb = self.block_tables[req.rid]
+                bt[req.slot, :len(tb)] = tb
+            cache = self.page_pool.gather(bt)
         else:
-            logits, self.cache = self._decode(toks, self.cache, pos)
+            cache = self.cache
+        if self.mode == "pingpong":
+            logits, cache = self.runtime.decode_microbatched(
+                toks, cache, pos, self.mb_slices)
+        else:
+            logits, cache = self._decode(toks, cache, pos)
+        if self.kv_layout == "paged":
+            self._paged_writeback(cache)
+        else:
+            self.cache = cache
         self.t_decode += time.perf_counter() - t0
         self.key, k = jax.random.split(self.key)
         # per-request key folding: sampled tokens must not depend on
@@ -411,7 +632,12 @@ class Engine:
             "mode": self.mode,
             "use_kernels": self.use_kernels,
             "disagg_prefill": self.prefill_worker is not None,
+            "kv_layout": self.kv_layout,
         }
+        if self.page_pool is not None:
+            out["kv_pages"] = self.page_pool.stats()
+        if self.prefix is not None:
+            out["prefix_cache"] = self.prefix.stats()
         # per-phase breakdown (host-issue wall time: the pipeline stays
         # async — prefill/transfer overlap in-flight decode)
         phases = {"transfer_s": self.t_transfer,

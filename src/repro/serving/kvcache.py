@@ -1,14 +1,30 @@
 """Batch-slot KV-cache management for continuous batching.
 
-The model-level cache (models.init_cache) is a fixed (B_max, W) ring
-buffer per layer; this module manages the request->row mapping so
-requests of different lengths can join/leave the running batch between
-decode iterations (Orca-style iteration-level scheduling, which both
-baselines in the paper employ and MegaScale-Infer inherits).
+This module manages the request->storage mapping so requests of
+different lengths can join/leave the running batch between decode
+iterations (Orca-style iteration-level scheduling, which both baselines
+in the paper employ and MegaScale-Infer inherits).  Two KV layouts sit
+behind it (``ServingConfig.kv_layout``):
+
+  * **contiguous** (default): the model-level cache (models.init_cache)
+    is a fixed (B_max, W) ring buffer per layer; a request owns one
+    whole row for its lifetime (``SlotAllocator`` /
+    ``MicrobatchSlotAllocator``), and the prefill->decode hop moves
+    full rows (``migrate_kv``).
+  * **paged**: rows are virtual — a request holds a block table of
+    fixed-size refcounted pages in a ``serving.pages.PagePool``, shared
+    prefixes are deduplicated by ``serving.prefix_cache.PrefixCache``,
+    and the prefill->decode hop moves only the non-shared pages
+    (``migrate_pages``).
+
+Batch-row slots are still allocated in both layouts (a live request
+needs a position in the decode batch either way); only the KV storage
+behind the row differs.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 
@@ -80,6 +96,35 @@ def migrate_kv(decode_cache, request_cache, row: int, *, sharding=None,
     return insert_rows(decode_cache, moved, row)
 
 
+def migrate_pages(pool, chunks: Sequence[Tuple[int, dict]],
+                  pages: Sequence[int], *, sharding=None,
+                  sync: bool = False, transport=None):
+    """Page-granular prefill->decode KV transfer: move per-page chunks
+    (as produced by ``pages.row_to_page_chunks`` on the prefill side)
+    onto the decode placement and install them into physical ``pages``
+    of the decode-side ``PagePool``.
+
+    This is the paged analogue of ``migrate_kv`` — and the reason the
+    paged layout makes the KV hop cheap: with a prefix-cache hit only
+    the request's *non-shared* pages appear in ``chunks``, so shared
+    system-prompt KV never crosses the prefill->decode boundary at all.
+    Each page is priced as its own ``kind="kv"`` transport hop, giving
+    the ledger per-page bytes accounting (``sync=True`` blocks per page;
+    the default issues all copies asynchronously and lets them overlap
+    decode compute).
+    """
+    if transport is None:
+        transport = transport_lib.default_transport()
+    if sharding is None:
+        sharding = jax.tree.leaves(pool.store)[0].sharding
+    if len(chunks) != len(pages):
+        raise ValueError(f"{len(pages)} pages for {len(chunks)} chunks")
+    for (_, chunk), page in zip(chunks, pages):
+        moved = transport.migrate_pages(chunk, sharding, sync=sync).data
+        pool.write_chunk(page, moved)
+    return pool
+
+
 def reset_row(global_cache, cfg: ModelConfig, row: int, max_seq: int):
     """Invalidate a row (request finished): mark kv positions empty and
     zero recurrent state, so a recycled KV slot can never expose the
@@ -109,9 +154,18 @@ def reset_row(global_cache, cfg: ModelConfig, row: int, max_seq: int):
 
 
 class SlotAllocator:
+    """FIFO batch-row allocator.
+
+    Invariant (checked, not assumed): a slot is held by at most one
+    request at a time — same guarantee ``MicrobatchSlotAllocator``
+    enforces.  The free list is a deque so alloc is O(1), not the
+    O(n) ``list.pop(0)`` it used to be.
+    """
+
     def __init__(self, n_slots: int):
-        self.free: List[int] = list(range(n_slots))
+        self.free: Deque[int] = deque(range(n_slots))
         self.used: Dict[int, int] = {}  # request id -> slot
+        self._held = set()              # slots currently assigned
 
     def alloc(self, rid: int) -> Optional[int]:
         if rid in self.used:
@@ -119,12 +173,17 @@ class SlotAllocator:
                              f"{self.used[rid]}")
         if not self.free:
             return None
-        slot = self.free.pop(0)
+        slot = self.free.popleft()
+        if slot in self._held:
+            raise RuntimeError(f"KV slot {slot} double-assigned "
+                               f"(rid={rid}, holder={self.used})")
+        self._held.add(slot)
         self.used[rid] = slot
         return slot
 
     def release(self, rid: int) -> int:
         slot = self.used.pop(rid)
+        self._held.discard(slot)
         self.free.append(slot)
         return slot
 
@@ -157,20 +216,25 @@ class MicrobatchSlotAllocator:
                 a.stop != b.start for a, b in zip(groups, groups[1:])):
             raise ValueError(f"groups {groups} must tile [0, {n_slots})")
         self.groups = list(groups)
-        self.free_by_group: List[List[int]] = [
-            list(range(s.start, s.stop)) for s in groups]
+        self.free_by_group: List[Deque[int]] = [
+            deque(range(s.start, s.stop)) for s in groups]
         self.used: Dict[int, int] = {}      # request id -> slot
         self._held = set()                  # slots currently assigned
+        # precomputed slot -> group index so release is O(1), not a
+        # linear scan over the group ranges
+        self._slot_group: List[int] = [0] * n_slots
+        for gi, s in enumerate(groups):
+            for slot in range(s.start, s.stop):
+                self._slot_group[slot] = gi
 
     @property
     def free(self) -> List[int]:
         return [s for g in self.free_by_group for s in g]
 
     def group_of(self, slot: int) -> int:
-        for gi, s in enumerate(self.groups):
-            if s.start <= slot < s.stop:
-                return gi
-        raise ValueError(f"slot {slot} outside all groups")
+        if not 0 <= slot < len(self._slot_group):
+            raise ValueError(f"slot {slot} outside all groups")
+        return self._slot_group[slot]
 
     def alloc(self, rid: int, group: Optional[int] = None) -> Optional[int]:
         if rid in self.used:
@@ -183,7 +247,7 @@ class MicrobatchSlotAllocator:
             group = max(candidates, key=lambda gi: len(self.free_by_group[gi]))
         if not self.free_by_group[group]:
             return None
-        slot = self.free_by_group[group].pop(0)
+        slot = self.free_by_group[group].popleft()
         if slot in self._held:
             raise RuntimeError(f"KV slot {slot} double-assigned "
                                f"(rid={rid}, holder={self.used})")

@@ -17,12 +17,17 @@ Version history:
   3  — ``use_kernels`` joins the core payload (always present, so perf
      baselines distinguish the Pallas hot path from the jnp path; a
      semantic addition every entry must carry, hence the bump).
+  4  — ``kv_layout`` joins the core payload (always present — paged and
+     contiguous runs are different memory systems and must never be
+     compared silently), plus the optional ``kv_pages`` (page-pool
+     occupancy/high-water) and ``prefix_cache`` (radix hit/miss/evict)
+     sections for paged engines.
 """
 from __future__ import annotations
 
 from typing import List, TypedDict
 
-STATS_SCHEMA_VERSION = 3
+STATS_SCHEMA_VERSION = 4
 
 
 class PhaseStats(TypedDict, total=False):
@@ -58,6 +63,31 @@ class TransportStats(TypedDict, total=False):
     collective: TransportHopStats
 
 
+class PagePoolStats(TypedDict):
+    """Page-pool accounting (``serving.pages.PagePool.stats``)."""
+    n_pages: int
+    page_size: int
+    used: int
+    free: int
+    reserved: int
+    high_water: int
+    utilization: float
+    allocs: int
+    forks: int
+    released: int
+
+
+class PrefixCacheStats(TypedDict):
+    """Radix prefix-cache counters (``serving.prefix_cache``)."""
+    hits: int
+    misses: int
+    hit_rate: float
+    hit_tokens: int
+    evictions: int
+    inserts: int
+    nodes: int
+
+
 class EngineStats(TypedDict, total=False):
     """The stable shape of ``Engine.stats()``.
 
@@ -72,7 +102,11 @@ class EngineStats(TypedDict, total=False):
     mode: str
     use_kernels: bool
     disagg_prefill: bool
+    kv_layout: str
     phases: PhaseStats
+    # paged KV layout only (schema v4+)
+    kv_pages: PagePoolStats
+    prefix_cache: PrefixCacheStats
     # ping-pong runtime only
     n_microbatches: int
     stages: dict

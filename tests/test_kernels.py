@@ -96,6 +96,53 @@ def test_decode_attention(b, h, hkv, hd, w, window, cap, dtype):
                     **_tol(dtype))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,hd,ps,npg,window,cap", [
+    (2, 4, 2, 16, 8, 4, 0, 0.0),
+    (1, 8, 1, 32, 16, 3, 0, 0.0),    # MQA
+    (3, 4, 4, 16, 8, 4, 16, 0.0),    # MHA + sliding window
+    (2, 4, 2, 32, 8, 4, 0, 50.0),    # softcap
+])
+def test_paged_decode_attention(b, h, hkv, hd, ps, npg, window, cap, dtype):
+    """Block-table-indexed paged kernel vs the dense oracle: scatter a
+    dense cache into a shuffled page pool, index it through per-request
+    block tables with unmapped (-1) tails, and demand the contiguous
+    reference answer."""
+    w = ps * npg
+    ks = jax.random.split(jax.random.fold_in(KEY, b * w + h + ps), 3)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    kc = jax.random.normal(ks[1], (b, w, hkv, hd), dtype)
+    vc = jax.random.normal(ks[2], (b, w, hkv, hd), dtype)
+    rng = np.random.RandomState(7)
+    # ragged fill levels: request i owns only ceil((pos+1)/ps) pages
+    pos = jnp.asarray(rng.randint(ps // 2, w, size=(b,)), jnp.int32)
+    cache_pos = jnp.broadcast_to(jnp.arange(w, dtype=jnp.int32), (b, w))
+    cache_pos = jnp.where(cache_pos <= pos[:, None], cache_pos, -1)
+    # pool assignment: each (request, logical page) -> a distinct shuffled
+    # physical page; pages past the fill level stay unmapped (-1)
+    perm = rng.permutation(b * npg)
+    bt = np.full((b, npg), -1, np.int64)
+    pool_k = np.zeros((b * npg, ps, hkv, hd), np.asarray(kc).dtype)
+    pool_v = np.zeros_like(pool_k)
+    pool_pos = np.full((b * npg, ps), -1, np.int32)
+    for i in range(b):
+        n_owned = int(pos[i]) // ps + 1
+        for lp in range(n_owned):
+            pg = int(perm[i * npg + lp])
+            bt[i, lp] = pg
+            sl = slice(lp * ps, (lp + 1) * ps)
+            pool_k[pg] = np.asarray(kc)[i, sl]
+            pool_v[pg] = np.asarray(vc)[i, sl]
+            pool_pos[pg] = np.asarray(cache_pos)[i, sl]
+    got = ops.paged_decode_attention(
+        q, jnp.asarray(pool_k), jnp.asarray(pool_v), jnp.asarray(pool_pos),
+        jnp.asarray(bt, jnp.int32), pos, window=window, attn_softcap=cap)
+    want = ref.decode_attention_ref(q, kc, vc, cache_pos, pos, window=window,
+                                    attn_softcap=cap)
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    **_tol(dtype))
+
+
 def test_decode_attention_long_blocked():
     """KV length much larger than the block: exercises online-softmax carry."""
     b, h, hkv, hd, w = 1, 2, 1, 16, 4096

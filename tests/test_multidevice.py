@@ -233,6 +233,49 @@ print("KERNELS-8DEV-OK")
     assert "KERNELS-8DEV-OK" in out
 
 
+def test_paged_kv_8_devices_token_identical():
+    """PR-6 tentpole acceptance: on the 4 attention + 4 expert split,
+    the paged KV layout (page pool + radix prefix cache) through the
+    ping-pong + M2N runtime emits exactly the contiguous engine's
+    tokens, and the shared-prefix workload registers radix hits."""
+    out = run_sub("""
+import jax, numpy as np
+assert jax.device_count() == 8, jax.device_count()
+from repro.config import get_config, reduced
+from repro.core.disagg import DisaggPlan, DisaggregatedInstance
+from repro.models import init_params
+from repro.serving.config import ServingConfig
+from repro.serving.engine import Engine, Request
+cfg = reduced(get_config("mixtral-8x22b"))
+params = init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.RandomState(0)
+head = rng.randint(2, cfg.vocab, size=16).tolist()   # 2 shared pages
+prompts = [head + rng.randint(2, cfg.vocab, size=rng.randint(3, 8)).tolist()
+           for _ in range(5)]
+devs = jax.devices()
+def serve(layout):
+    inst = DisaggregatedInstance(cfg, params, attn_devices=devs[:4],
+                                 expert_devices=devs[4:],
+                                 plan=DisaggPlan(n_microbatches=2,
+                                                 use_m2n=True))
+    sc = ServingConfig(max_batch=4, max_seq=64, runtime="pingpong",
+                       kv_layout=layout, page_size=8, verbose=False)
+    eng = Engine(cfg, params, config=sc, runtime=inst)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    return {r.rid: r.generated for r in eng.run_until_done()}, eng.stats()
+contig, _ = serve("contiguous")
+paged, stats = serve("paged")
+assert paged == contig, (paged, contig)
+assert stats["kv_layout"] == "paged"
+assert stats["kv_pages"]["high_water"] > 0
+pc = stats["prefix_cache"]
+assert pc["hits"] > 0 and pc["hit_tokens"] > 0, pc
+print("PAGED-8DEV-OK hits=%d hit_tokens=%d" % (pc["hits"], pc["hit_tokens"]))
+""")
+    assert "PAGED-8DEV-OK" in out
+
+
 def test_m2n_sharded_dispatch_2x4_mesh():
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np

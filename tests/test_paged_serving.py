@@ -1,0 +1,309 @@
+"""End-to-end paged-KV serving tests (PR-6 tentpole).
+
+The acceptance bar for the paged layout is parity by construction:
+under greedy sampling the paged engine must emit byte-identical token
+sequences to the contiguous engine across every decode runtime
+(monolithic, ping-pong, ping-pong + M2N, with and without the Pallas
+kernels, and with live expert rebalancing active).  On top of parity:
+radix prefix reuse must measurably engage on shared-prefix workloads
+(nonzero hits, fewer prefill-computed tokens), disaggregated prefill
+must move KV at page granularity (one "kv" transport hop per migrated
+page, shared pages never crossing the wire), admission must survive a
+page pool far smaller than worst-case demand, and the O(1) slot
+allocators must hold their double-assignment invariants.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced
+from repro.core.disagg import DisaggPlan, DisaggregatedInstance
+from repro.models import init_params
+from repro.serving.config import ServingConfig
+from repro.serving.engine import Engine, Request
+from repro.serving.kvcache import (MicrobatchSlotAllocator, SlotAllocator,
+                                   mb_slot_ranges)
+from repro.serving.prefill import PrefillWorker
+from repro.serving.stats import STATS_SCHEMA_VERSION
+
+PS = 8
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = reduced(get_config("qwen2-moe-a2.7b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, n=5, seed=0, shared=0):
+    rng = np.random.RandomState(seed)
+    head = rng.randint(2, cfg.vocab, size=shared).tolist()
+    return [head + rng.randint(2, cfg.vocab,
+                               size=rng.randint(3, 10)).tolist()
+            for _ in range(n)]
+
+
+def _sc(**kw):
+    base = dict(max_batch=3, max_seq=64, page_size=PS, verbose=False)
+    base.update(kw)
+    return ServingConfig(**base)
+
+
+def _serve(cfg, params, prompts, sc, max_new=5, **engine_kw):
+    eng = Engine(cfg, params, config=sc, **engine_kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    done = {r.rid: r.generated for r in eng.run_until_done(max_iters=500)}
+    return done, eng
+
+
+def _pingpong(cfg, params, **plan_kw):
+    return DisaggregatedInstance(
+        cfg, params, plan=DisaggPlan(n_microbatches=2, **plan_kw))
+
+
+# ------------------------------------------------------------------ parity
+class TestPagedParity:
+    def test_monolithic_parity(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, seed=11)
+        mono, _ = _serve(cfg, params, prompts, _sc())
+        for prefix in (True, False):
+            got, eng = _serve(cfg, params, prompts,
+                              _sc(kv_layout="paged", prefix_cache=prefix))
+            assert got == mono, f"paged(prefix={prefix}) diverged"
+            assert eng.stats()["kv_layout"] == "paged"
+
+    def test_pingpong_parity(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, seed=13)
+        mono, _ = _serve(cfg, params, prompts, _sc())
+        got, eng = _serve(cfg, params, prompts,
+                          _sc(kv_layout="paged", runtime="pingpong"),
+                          runtime=_pingpong(cfg, params))
+        assert got == mono, "paged ping-pong diverged"
+        assert eng.stats()["stages"]["attn_n"] > 0
+
+    def test_pingpong_m2n_parity(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, seed=17)
+        mono, _ = _serve(cfg, params, prompts, _sc())
+        got, _ = _serve(cfg, params, prompts,
+                        _sc(kv_layout="paged", runtime="pingpong",
+                            use_m2n=True),
+                        runtime=_pingpong(cfg, params, use_m2n=True))
+        assert got == mono, "paged ping-pong+M2N diverged"
+
+    def test_pingpong_kernels_parity(self, moe_setup):
+        """Pallas hot path (interpret mode on CPU): the paged engine
+        gathers a dense view, so the kernels see identical inputs."""
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, n=3, seed=19)
+        inst_c = _pingpong(cfg, params, use_kernels=True)
+        mono, _ = _serve(cfg, params, prompts,
+                         _sc(runtime="pingpong", use_kernels=True),
+                         max_new=3, runtime=inst_c)
+        inst_p = _pingpong(cfg, params, use_kernels=True)
+        got, _ = _serve(cfg, params, prompts,
+                        _sc(kv_layout="paged", runtime="pingpong",
+                            use_kernels=True),
+                        max_new=3, runtime=inst_p)
+        assert got == mono, "paged kernels path diverged"
+
+    def test_parity_across_live_rebalance(self, moe_setup):
+        """Expert placement changes mid-run must not disturb paged
+        decode: routing is a function of activations, not KV layout."""
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, n=6, seed=23)
+        runs = {}
+        for layout in ("contiguous", "paged"):
+            got, eng = _serve(
+                cfg, params, prompts,
+                _sc(kv_layout=layout, runtime="pingpong",
+                    expert_rebalance_every=2),
+                runtime=_pingpong(cfg, params))
+            assert eng.stats()["rebalances"] > 0
+            runs[layout] = got
+        assert runs["paged"] == runs["contiguous"], \
+            "paged diverged after live expert rebalance"
+
+
+# ------------------------------------------------------------ prefix reuse
+class TestPrefixReuse:
+    def test_shared_prefix_hits_and_parity(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, n=5, seed=29, shared=3 * PS)
+        mono, _ = _serve(cfg, params, prompts, _sc())
+        got, eng = _serve(cfg, params, prompts, _sc(kv_layout="paged"))
+        assert got == mono, "prefix-hit suffix prefill diverged"
+        pstats = eng.stats()["prefix_cache"]
+        assert pstats["hits"] == 4          # every request after the first
+        assert pstats["misses"] == 1
+        # each hit skipped the 3 shared pages
+        assert pstats["hit_tokens"] == 4 * 3 * PS
+
+    def test_prefix_reuse_skips_prefill_compute(self, moe_setup):
+        """The reuse must be real work saved, not just counter noise:
+        with the cache on, prefill computes only the suffixes."""
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, n=5, seed=31, shared=3 * PS)
+        total = sum(len(p) for p in prompts)
+        _, eng_on = _serve(cfg, params, prompts, _sc(kv_layout="paged"))
+        _, eng_off = _serve(cfg, params, prompts,
+                            _sc(kv_layout="paged", prefix_cache=False))
+        saved = eng_on.stats()["prefix_cache"]["hit_tokens"]
+        assert saved == 4 * 3 * PS
+        assert "prefix_cache" not in eng_off.stats()
+        # computed tokens: everything minus the shared pages re-gathered
+        assert total - saved < total
+
+    def test_prefix_reuse_cuts_prefill_time(self, moe_setup):
+        """The acceptance bar: on a shared-system-prompt workload the
+        radix cache must cut wall-clock prefill time, not just token
+        counters.  Measured on a second request wave so jit compiles
+        land in the first."""
+        cfg, params = moe_setup
+        rng = np.random.RandomState(61)
+        head = rng.randint(2, cfg.vocab, size=3 * PS).tolist()
+
+        def wave(n, base):
+            return [(base + i,
+                     head + rng.randint(2, cfg.vocab, size=PS).tolist())
+                    for i in range(n)]
+
+        times = {}
+        for prefix in (True, False):
+            eng = Engine(cfg, params,
+                         config=_sc(kv_layout="paged", prefix_cache=prefix))
+            for rid, p in wave(3, 0):       # absorbs compiles, seeds tree
+                eng.submit(Request(rid=rid, prompt=p, max_new_tokens=2))
+            eng.run_until_done(max_iters=200)
+            warm = eng.stats()["phases"]["prefill_s"]
+            for rid, p in wave(4, 100):
+                eng.submit(Request(rid=rid, prompt=p, max_new_tokens=2))
+            eng.run_until_done(max_iters=200)
+            times[prefix] = eng.stats()["phases"]["prefill_s"] - warm
+            if prefix:
+                assert eng.stats()["prefix_cache"]["hits"] >= 4
+        assert times[True] < times[False], \
+            f"prefix cache made prefill slower: {times}"
+
+    def test_random_prompts_all_miss(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, n=4, seed=37)       # short, no shared head
+        _, eng = _serve(cfg, params, prompts, _sc(kv_layout="paged"))
+        pstats = eng.stats()["prefix_cache"]
+        assert pstats["hits"] == 0 and pstats["misses"] == 4
+
+
+# ----------------------------------------------------- page-granular moves
+class TestPagedDisaggPrefill:
+    def test_parity_and_per_page_hops(self, moe_setup):
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, n=5, seed=41)
+        mono, _ = _serve(cfg, params, prompts, _sc())
+        for transfer in ("sync", "async"):
+            sc = _sc(kv_layout="paged", transfer=transfer,
+                     prefix_cache=False)
+            w = PrefillWorker(cfg, params, max_seq=sc.max_seq,
+                              page_size=sc.page_size)
+            got, eng = _serve(cfg, params, prompts, sc, prefill_worker=w)
+            assert got == mono, f"paged disagg transfer={transfer} diverged"
+            hops = eng.stats()["transport"]["kv"]["hops"]
+            want = sum(-(-len(p) // PS) for p in prompts)
+            assert hops == want, "expected one kv hop per migrated page"
+
+    def test_warm_prefix_cache_shrinks_migration(self, moe_setup):
+        """Once the radix tree is seeded, only non-shared pages cross
+        the prefill->decode wire."""
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, n=5, seed=43, shared=3 * PS)
+        sc = _sc(kv_layout="paged")
+        w = PrefillWorker(cfg, params, max_seq=sc.max_seq,
+                          page_size=sc.page_size)
+        eng = Engine(cfg, params, config=sc, prefill_worker=w)
+        # warm wave: seeds the tree (work-ahead means a cold burst all
+        # misses — steady-state hits need an installed chain)
+        eng.submit(Request(rid=100, prompt=prompts[0], max_new_tokens=2))
+        eng.run_until_done(max_iters=100)
+        cold_bytes = eng.stats()["transport"]["kv"]["bytes"]
+        for i, p in enumerate(prompts[1:]):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=2))
+        eng.run_until_done(max_iters=200)
+        st = eng.stats()
+        assert st["prefix_cache"]["hits"] == 4
+        warm_bytes = st["transport"]["kv"]["bytes"] - cold_bytes
+        # 4 requests x (1 suffix page) vs 4 x 4 full pages uncached
+        assert warm_bytes < cold_bytes * 2, \
+            "warm-cache migration should move a fraction of a cold wave"
+
+
+# ----------------------------------------------------------- admission/OOM
+class TestPagedAdmission:
+    def test_tight_pool_serializes_but_finishes(self, moe_setup):
+        """A pool sized for ~one request forces head-of-line blocking;
+        every request must still finish with untouched parity."""
+        cfg, params = moe_setup
+        prompts = _prompts(cfg, n=4, seed=47)
+        mono, _ = _serve(cfg, params, prompts, _sc())
+        got, eng = _serve(cfg, params, prompts,
+                          _sc(kv_layout="paged", kv_pool_pages=3,
+                              prefix_cache=False))
+        assert got == mono
+        assert eng.page_pool.used == 0 and eng.page_pool.reserved == 0
+
+    def test_tight_pool_evicts_prefix_tree(self, moe_setup):
+        """With the radix tree holding finished chains, a tight pool
+        must reclaim tree-only pages instead of deadlocking."""
+        cfg, params = moe_setup
+        rng = np.random.RandomState(53)
+        head = rng.randint(2, cfg.vocab, size=2 * PS).tolist()
+        # suffix of PS+1 tokens: each prompt contributes one distinct
+        # full page to the tree on top of the 2 shared ones, so the
+        # tree outgrows a 6-page pool and admission must evict
+        prompts = [head + rng.randint(2, cfg.vocab, size=PS + 1).tolist()
+                   for _ in range(5)]
+        got, eng = _serve(cfg, params, prompts,
+                          _sc(kv_layout="paged", kv_pool_pages=6))
+        assert all(len(g) == 5 for g in got.values())
+        assert eng.stats()["prefix_cache"]["evictions"] > 0
+
+    def test_stats_schema_v4_sections(self, moe_setup):
+        cfg, params = moe_setup
+        _, eng_c = _serve(cfg, params, _prompts(cfg, n=2, seed=59), _sc())
+        st_c = eng_c.stats()
+        assert st_c["schema_version"] == STATS_SCHEMA_VERSION == 4
+        assert st_c["kv_layout"] == "contiguous"
+        assert "kv_pages" not in st_c and "prefix_cache" not in st_c
+        _, eng_p = _serve(cfg, params, _prompts(cfg, n=2, seed=59),
+                          _sc(kv_layout="paged"))
+        st_p = eng_p.stats()
+        assert st_p["kv_layout"] == "paged"
+        assert st_p["kv_pages"]["n_pages"] == _sc().n_pool_pages
+        assert st_p["kv_pages"]["high_water"] > 0
+        assert st_p["prefix_cache"]["misses"] == 2
+
+
+# ----------------------------------------------------- allocator satellites
+class TestAllocatorInvariants:
+    def test_slot_allocator_fifo_and_double_assign(self):
+        a = SlotAllocator(3)
+        assert [a.alloc(r) for r in range(3)] == [0, 1, 2]
+        assert a.alloc(9) is None
+        with pytest.raises(ValueError):
+            a.alloc(0)                      # rid already holds a slot
+        assert a.release(1) == 1
+        assert a.alloc(9) == 1              # FIFO recycling
+        a.free.append(0)                    # corrupt the free list...
+        with pytest.raises(RuntimeError):
+            a.alloc(10)                     # ...caught, not propagated
+
+    def test_microbatch_group_of_is_table_lookup(self):
+        groups = mb_slot_ranges(7, 3)
+        a = MicrobatchSlotAllocator(7, groups)
+        for gi, s in enumerate(groups):
+            for slot in range(s.start, s.stop):
+                assert a.group_of(slot) == gi
+        with pytest.raises(ValueError):
+            a.group_of(7)

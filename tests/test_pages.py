@@ -1,0 +1,276 @@
+"""Paged KV-cache page machinery tests (PR-6 tentpole).
+
+Covers the :class:`~repro.serving.pages.PagePool` itself: alloc/release
+refcount invariants, the free-list accounting identity, reservation
+(OOM-safe admission), reset-on-alloc (a recycled page never exposes its
+previous holder's validity bits), copy-on-write fork correctness, and
+the contiguous<->paged round-trip equivalence: a prefilled request row
+split into a page chain and gathered back is bit-identical to
+``kvcache.extract_row`` of the same request in a contiguous cache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal image without dev deps: seeded-random fallback
+    from _hypo_fallback import given, settings, strategies as st
+
+from repro.config import get_config, reduced
+from repro.models import init_cache, init_params, prefill
+from repro.serving.kvcache import extract_row, insert_rows
+from repro.serving.pages import (PageError, PagePool, n_pages_for,
+                                 paged_supported, row_to_page_chunks)
+
+MAX_SEQ, PS = 64, 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("mixtral-8x22b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _pool(cfg, n_pages=24):
+    return PagePool(cfg, n_pages=n_pages, page_size=PS, max_seq=MAX_SEQ)
+
+
+def _tree_equal(a, b, only_valid=False):
+    """Leaf-wise equality of two cache pytrees; with ``only_valid``,
+    k/v leaves are compared only where the entry's pos marks a written
+    slot (unwritten slots hold unspecified bytes in both layouts)."""
+    for ea, eb in zip(a["blocks"] + a["remainder"],
+                      b["blocks"] + b["remainder"]):
+        assert set(ea) == set(eb)
+        mask = None
+        if only_valid and "pos" in ea:
+            mask = np.asarray(ea["pos"]) >= 0
+        for k in ea:
+            xa, xb = np.asarray(ea[k]), np.asarray(eb[k])
+            assert xa.shape == xb.shape, (k, xa.shape, xb.shape)
+            if mask is not None and k != "pos":
+                m = mask.reshape(mask.shape + (1,) * (xa.ndim - mask.ndim))
+                xa, xb = np.where(m, xa, 0), np.where(m, xb, 0)
+            np.testing.assert_array_equal(xa, xb, err_msg=k)
+
+
+# ---------------------------------------------------------------- support
+
+
+def test_paged_supported_mixtral(setup):
+    cfg, _ = setup
+    ok, why = paged_supported(cfg, MAX_SEQ, PS)
+    assert ok, why
+
+
+def test_paged_supported_rejects_misaligned(setup):
+    cfg, _ = setup
+    ok, why = paged_supported(cfg, MAX_SEQ, 7)
+    assert not ok and "whole number of pages" in why
+
+
+def test_paged_supported_rejects_non_kv_state():
+    cfg = reduced(get_config("mamba2-1.3b"))   # carries SSM state
+    ok, why = paged_supported(cfg, MAX_SEQ, PS)
+    assert not ok and "non-KV" in why
+
+
+def test_n_pages_for():
+    assert n_pages_for(0, 8) == 0
+    assert n_pages_for(1, 8) == 1
+    assert n_pages_for(8, 8) == 1
+    assert n_pages_for(9, 8) == 2
+
+
+# ------------------------------------------------------- pool invariants
+
+
+def test_alloc_release_refcount(setup):
+    cfg, _ = setup
+    pool = _pool(cfg)
+    p = pool.alloc()
+    assert pool.refcount[p] == 1
+    assert pool.used == 1
+    pool.retain(p)
+    assert pool.refcount[p] == 2
+    pool.release(p)
+    assert pool.used == 1          # still one reference alive
+    pool.release(p)
+    assert pool.used == 0 and pool.refcount[p] == 0
+    # free + used == n_pages always
+    assert len(pool.free) + pool.used == pool.n_pages
+
+
+def test_double_release_raises(setup):
+    cfg, _ = setup
+    pool = _pool(cfg)
+    p = pool.alloc()
+    pool.release(p)
+    with pytest.raises(PageError):
+        pool.release(p)
+    with pytest.raises(PageError):
+        pool.retain(p)
+
+
+def test_out_of_pages(setup):
+    cfg, _ = setup
+    pool = _pool(cfg, n_pages=2)
+    pool.alloc(), pool.alloc()
+    with pytest.raises(PageError):
+        pool.alloc()
+
+
+def test_reservation_accounting(setup):
+    cfg, _ = setup
+    pool = _pool(cfg, n_pages=4)
+    assert pool.reserve(3)
+    assert not pool.reserve(2)      # only 1 unreserved page left
+    assert pool.available == 1
+    p = pool.alloc(from_reserve=True)
+    assert pool.reserved == 2 and pool.used == 1
+    # plain alloc can't eat into the remaining reservation
+    pool.alloc()
+    with pytest.raises(PageError):
+        pool.alloc()
+    pool.unreserve(2)
+    pool.alloc(), pool.alloc()      # reservation returned to the pool
+    assert pool.used == 4
+    pool.release(p)
+    assert pool.used == 3
+
+
+def test_reset_on_alloc(setup):
+    """A recycled page must come back with pos=-1 everywhere: stale
+    validity from a previous holder would corrupt attention masking."""
+    cfg, params = setup
+    pool = _pool(cfg, n_pages=1)    # the freed page must be recycled
+    toks = jnp.arange(2, 2 + PS)[None]
+    _, row = prefill(params, cfg, toks, MAX_SEQ)
+    p = pool.alloc()
+    pool.write_row_span([p], row, 0, PS)
+    for e in pool.store["blocks"]:
+        assert (np.asarray(e["pos"])[:, p] >= 0).all()
+    pool.release(p)
+    p2 = pool.alloc()
+    assert p2 == p
+    for e in pool.store["blocks"]:
+        assert (np.asarray(e["pos"])[:, p2] == -1).all()
+
+
+# ----------------------------------------------------------- copy-on-write
+
+
+def test_fork_is_copy_on_write(setup):
+    cfg, params = setup
+    pool = _pool(cfg)
+    toks = jnp.arange(2, 2 + PS)[None]
+    _, row = prefill(params, cfg, toks, MAX_SEQ)
+    p = pool.alloc()
+    pool.write_row_span([p], row, 0, PS)
+    pool.retain(p)                      # second holder
+    original = pool.gather_row([p])
+    new = pool.fork(p)
+    assert new != p
+    assert pool.refcount[p] == 1 and pool.refcount[new] == 1
+    # the fork carries identical contents...
+    _tree_equal(pool.gather_row([new]), original)
+    # ...and writing into it leaves the original untouched
+    toks2 = jnp.arange(100, 100 + PS)[None]
+    _, row2 = prefill(params, cfg, toks2, MAX_SEQ)
+    pool.write_row_span([new], row2, 0, PS)
+    _tree_equal(pool.gather_row([p]), original)
+
+
+def test_fork_free_page_raises(setup):
+    cfg, _ = setup
+    pool = _pool(cfg)
+    p = pool.alloc()
+    pool.release(p)
+    with pytest.raises(PageError):
+        pool.fork(p)
+
+
+# ------------------------------------------------------------- round trip
+
+
+def test_row_chunk_gather_round_trip(setup):
+    """contiguous extract_row -> page chunks -> pool -> gather_row is
+    the identity (on written slots; unwritten slots are pos=-1 in both
+    layouts)."""
+    cfg, params = setup
+    pool = _pool(cfg)
+    plen = 21                           # 2 full pages + a partial one
+    toks = jnp.arange(2, 2 + plen)[None]
+    _, row = prefill(params, cfg, toks, MAX_SEQ)
+    contig = init_cache(cfg, 3, MAX_SEQ, jnp.float32)
+    contig = insert_rows(contig, row, 1)
+    dense_row = extract_row(contig, 1)
+
+    chunks = row_to_page_chunks(dense_row, 0, plen, PS)
+    assert [lp for lp, _ in chunks] == [0, 1, 2]
+    pages = [pool.alloc() for _ in chunks]
+    for (_, chunk), p in zip(chunks, pages):
+        pool.write_chunk(p, chunk)
+    _tree_equal(pool.gather_row(pages), dense_row, only_valid=True)
+
+
+def test_gather_unmapped_pages_read_empty(setup):
+    cfg, _ = setup
+    pool = _pool(cfg)
+    bt = np.full((2, MAX_SEQ // PS), -1, np.int32)
+    dense = pool.gather(bt)
+    for e in dense["blocks"]:
+        assert (np.asarray(e["pos"]) == -1).all()
+        assert np.asarray(e["k"]).shape[1:3] == (2, MAX_SEQ)
+
+
+def test_chunk_start_must_be_page_aligned(setup):
+    cfg, params = setup
+    toks = jnp.arange(2, 2 + PS)[None]
+    _, row = prefill(params, cfg, toks, MAX_SEQ)
+    with pytest.raises(PageError):
+        row_to_page_chunks(row, 3, PS, PS)
+
+
+# -------------------------------------------------------------- property
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from(["alloc", "retain", "release", "fork"]),
+                min_size=1, max_size=40),
+       st.integers(min_value=2, max_value=10))
+def test_pool_invariants_property(ops, n_pages):
+    """Random alloc/retain/release/fork interleavings preserve the
+    accounting identity free + used == n_pages, never double-assign a
+    page, and keep refcounts consistent with the free list."""
+    cfg = reduced(get_config("mixtral-8x22b"))
+    pool = PagePool(cfg, n_pages=n_pages, page_size=PS, max_seq=MAX_SEQ)
+    live = []
+    for i, op in enumerate(ops):
+        try:
+            if op == "alloc":
+                live.append(pool.alloc(_reset=False))
+            elif op == "retain" and live:
+                pool.retain(live[i % len(live)])
+                live.append(live[i % len(live)])
+            elif op == "release" and live:
+                pool.release(live.pop(i % len(live)))
+            elif op == "fork" and live:
+                j = i % len(live)
+                live[j] = pool.fork(live[j], from_reserve=False)
+        except PageError:
+            pass                        # out of pages is legal here
+        assert len(pool.free) + pool.used == pool.n_pages
+        on_free = set(pool.free)
+        for p in range(pool.n_pages):
+            if p in on_free:
+                assert pool.refcount[p] == 0
+            else:
+                assert pool.refcount[p] >= 1
+    # draining every reference returns the pool to empty
+    for p in live:
+        pool.release(p)
+    assert pool.used == 0

@@ -1,0 +1,169 @@
+"""Radix prefix-cache tests (PR-6 tentpole).
+
+Covers :class:`~repro.serving.prefix_cache.PrefixCache`: page-granular
+insert/lookup semantics (only full pages shared, the final prompt token
+never matched so admission always has fresh logits), lookup pinning
+(pages returned by a lookup cannot be evicted out from under the
+caller), LRU leaf eviction with cascade up cold chains, hit/miss/evict
+counters, and an insert/lookup consistency property test.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal image without dev deps: seeded-random fallback
+    from _hypo_fallback import given, settings, strategies as st
+
+from repro.config import get_config, reduced
+from repro.serving.pages import PagePool
+from repro.serving.prefix_cache import PrefixCache
+
+MAX_SEQ, PS = 64, 8
+
+
+@pytest.fixture()
+def pool():
+    cfg = reduced(get_config("mixtral-8x22b"))
+    return PagePool(cfg, n_pages=32, page_size=PS, max_seq=MAX_SEQ)
+
+
+def _chain(pool, n):
+    return [pool.alloc() for _ in range(n)]
+
+
+def _prompt(*chunks):
+    out = []
+    for c in chunks:
+        out.extend([c] * PS)
+    return out
+
+
+def test_miss_then_hit(pool):
+    pc = PrefixCache(pool)
+    prompt = _prompt(1, 2) + [3, 4]     # 2 full pages + partial
+    h, pages = pc.lookup(prompt)
+    assert (h, pages) == (0, [])
+    chain = _chain(pool, 3)
+    pc.insert(prompt, chain)
+    assert len(pc) == 2                 # only the full pages registered
+    h, pages = pc.lookup(prompt)
+    assert h == 2 * PS and pages == chain[:2]
+    assert pc.stats()["hits"] == 1 and pc.stats()["misses"] == 1
+    assert pc.stats()["hit_tokens"] == 2 * PS
+
+
+def test_final_token_never_matched(pool):
+    """An exact-length prompt must still recompute >= 1 token so
+    admission has last-position logits to sample from."""
+    pc = PrefixCache(pool)
+    prompt = _prompt(1, 2)              # exactly 2 pages
+    chain = _chain(pool, 2)
+    pc.insert(prompt, chain)
+    h, pages = pc.lookup(prompt, pin=False)
+    assert h == PS and pages == chain[:1]   # capped at (16-1)//8 = 1
+
+
+def test_partial_page_never_shared(pool):
+    pc = PrefixCache(pool)
+    short = [1] * (PS - 1)              # less than one page
+    pc.insert(short, [])
+    assert len(pc) == 0
+    assert pc.lookup(short, pin=False) == (0, [])
+
+
+def test_divergent_suffixes_share_prefix(pool):
+    pc = PrefixCache(pool)
+    a = _prompt(1, 2) + [5]
+    b = _prompt(1, 3) + [5]             # same first page, different second
+    ca, cb = _chain(pool, 3), _chain(pool, 3)
+    pc.insert(a, ca)
+    # b's first page matches a's; insert must reuse that node
+    fresh = pc.insert(b, [ca[0]] + cb[1:])
+    assert fresh == 1                   # only b's second page is new
+    ha, pa = pc.lookup(a, pin=False)
+    hb, pb = pc.lookup(b, pin=False)
+    assert pa[0] == pb[0] == ca[0]
+    assert pa[1] == ca[1] and pb[1] == cb[1]
+
+
+def test_lookup_pins_pages(pool):
+    pc = PrefixCache(pool)
+    prompt = _prompt(1, 2) + [9]
+    chain = _chain(pool, 3)
+    base = [int(pool.refcount[p]) for p in chain]
+    pc.insert(prompt, chain)            # tree takes one ref per full page
+    assert [int(pool.refcount[p]) for p in chain[:2]] == \
+        [b + 1 for b in base[:2]]
+    h, pages = pc.lookup(prompt)        # pin=True default
+    assert [int(pool.refcount[p]) for p in pages] == \
+        [b + 2 for b in base[:2]]
+    # pinned pages are not evictable even after the holder's own release
+    for p in chain:
+        pool.release(p)
+    assert pc.evict(10) == 0
+    for p in pages:                     # drop the pins -> evictable
+        pool.release(p)
+    assert pc.evict(10) == 2
+    assert pool.refcount[chain[0]] == 0
+
+
+def test_lru_eviction_order(pool):
+    pc = PrefixCache(pool)
+    a, b = _prompt(1) + [7], _prompt(2) + [7]
+    ca, cb = _chain(pool, 2), _chain(pool, 2)
+    pc.insert(a, ca)
+    pc.insert(b, cb)
+    for p in ca + cb:                   # only the tree holds them now
+        pool.release(p)
+    pc.lookup(a, pin=False)             # a is now more recently used
+    assert pc.evict(1) == 1
+    assert pc.lookup(a, pin=False)[0] == PS      # a survived
+    assert pc.lookup(b, pin=False)[0] == 0       # b evicted
+    assert pc.stats()["evictions"] == 1
+
+
+def test_evict_cascades_up_cold_chains(pool):
+    pc = PrefixCache(pool)
+    prompt = _prompt(1, 2, 3) + [9]
+    chain = _chain(pool, 4)
+    pc.insert(prompt, chain)
+    for p in chain:
+        pool.release(p)
+    assert len(pc) == 3
+    # leaves-first: one evict round can walk the whole cold chain
+    assert pc.evict(3) == 3
+    assert len(pc) == 0
+    assert pool.used == 0               # every tree reference dropped
+
+
+def test_interior_nodes_not_evicted_while_children_live(pool):
+    pc = PrefixCache(pool)
+    prompt = _prompt(1, 2) + [9]
+    chain = _chain(pool, 3)
+    pc.insert(prompt, chain)
+    for p in chain:
+        pool.release(p)
+    pool.retain(chain[1])               # pin the leaf only
+    assert pc.evict(10) == 0            # parent is interior, leaf pinned
+    pool.release(chain[1])
+    assert pc.evict(10) == 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=3),
+                min_size=2, max_size=24))
+def test_insert_lookup_consistency_property(tokens):
+    """For any prompt: after insert, lookup returns a page-aligned
+    match of min(full pages, (len-1)//ps) pages, and the returned chain
+    is a prefix of the inserted one."""
+    cfg = reduced(get_config("mixtral-8x22b"))
+    pool = PagePool(cfg, n_pages=16, page_size=4, max_seq=MAX_SEQ)
+    pc = PrefixCache(pool)
+    n_full = len(tokens) // 4
+    chain = [pool.alloc() for _ in range(n_full)]
+    pc.insert(tokens, chain)
+    h, pages = pc.lookup(tokens, pin=False)
+    expect = min(n_full, (len(tokens) - 1) // 4)
+    assert h == expect * 4
+    assert pages == chain[:expect]
+    assert h < len(tokens)              # always >= 1 token to recompute
